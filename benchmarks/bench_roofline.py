@@ -1,0 +1,84 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md section
+Roofline).  One row per (arch x shape x mesh): the three terms in seconds,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and the projected
+roofline fraction (compute term / dominant term)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.registry import ARCHS
+from repro.launch.input_specs import arch_for_cell
+from repro.launch.roofline import terms_from_cell
+
+
+def load_cells(dry_dir: str = "experiments/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def build_table(dry_dir: str = "experiments/dryrun") -> list[dict]:
+    rows = []
+    for cell in load_cells(dry_dir):
+        cfg = arch_for_cell(ARCHS[cell["arch"]], cell["shape"])
+        t = terms_from_cell(cell, cfg)
+        rows.append({
+            "arch": cell["arch"], "shape": cell["shape"],
+            "mesh": cell["mesh"], "strategy": cell["strategy"],
+            "vq": cell["vq_attn"],
+            "compute_s": t.compute_s, "memory_s": t.memory_s,
+            "collective_s": t.collective_s,
+            "bottleneck": t.bottleneck,
+            "model_flops": t.model_flops,
+            "hlo_flops_dev": t.hlo_flops,
+            "flops_ratio": t.flops_ratio,
+            "roofline_fraction": t.details["roofline_fraction"],
+            "temp_gib": cell["memory"]["temp_bytes"] / 2**30,
+            "hlo_coll_gib": t.details["hlo_coll_bytes"] / 2**30,
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict], mesh: str = "pod16x16") -> str:
+    lines = [
+        "| arch | shape | strat | compute s | memory s | collective s | "
+        "bottleneck | MF/HLO | roofline frac | temp GiB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']}{'+vq' if r['vq'] else ''} | "
+            f"{r['strategy']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} |"
+            f" {r['collective_s']:.3e} | **{r['bottleneck']}** | "
+            f"{r['flops_ratio']:.2f} | {r['roofline_fraction']:.2f} | "
+            f"{r['temp_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(out_json: str = "experiments/roofline.json") -> list[tuple]:
+    rows = build_table()
+    if rows:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=1)
+    out = []
+    for r in rows:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append((name, dom * 1e6,
+                    f"bottleneck={r['bottleneck']};frac="
+                    f"{r['roofline_fraction']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    rows = build_table()
+    print(markdown_table(rows))
+    print()
+    print(markdown_table(rows, mesh="pod2x16x16"))

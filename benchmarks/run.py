@@ -1,0 +1,69 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Scale with REPRO_BENCH_FAST=0
+for the full (paper-sized) grids; default is the fast grid (CPU-friendly).
+
+  Table 2  -> bench_complexity
+  Table 3  -> bench_memory
+  Fig. 4   -> bench_convergence
+  Table 4/7-> bench_performance
+  Sec. 6   -> bench_inference
+  App. G   -> bench_ablation
+  (ours)   -> bench_roofline (from the multi-pod dry-run artifacts)
+  (ours)   -> bench_kernels (Pallas kernels, interpret mode, vs oracles)
+
+Each suite runs in its own subprocess: a single long-lived process
+accumulating hundreds of distinct jit executables eventually trips XLA's
+CPU JIT ("Failed to materialize symbols"); per-suite isolation bounds that
+state and also keeps wall-time numbers independent.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+SUITES = ["complexity", "memory", "kernels", "roofline", "inference",
+          "convergence", "ablation", "performance"]
+
+
+def run_suite_inline(name: str) -> None:
+    import importlib
+    mod = importlib.import_module(f"benchmarks.bench_{name}")
+    for row in mod.run():
+        print(",".join(str(x) for x in row))
+
+
+def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] in SUITES:
+        run_suite_inline(sys.argv[1])
+        return
+    print("name,us_per_call,derived")
+    sys.stdout.flush()
+    failures = 0
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "src"), here,
+         env.get("PYTHONPATH", "")])
+    for name in SUITES:
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", name],
+            capture_output=True, text=True, env=env, cwd=here,
+            timeout=3600)
+        if proc.returncode != 0:
+            sys.stderr.write(proc.stderr[-2000:])
+            print(f"{name}/SUITE_FAILED,0,error")
+            failures += 1
+        else:
+            sys.stdout.write(proc.stdout)
+        print(f"{name}/suite_wall,{(time.time()-t0)*1e6:.0f},ok")
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

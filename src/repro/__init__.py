@@ -1,0 +1,3 @@
+"""repro: VQ-GNN (NeurIPS 2021) as a production JAX/TPU framework."""
+
+__version__ = "1.0.0"

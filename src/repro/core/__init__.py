@@ -1,0 +1,15 @@
+"""The paper's primary contribution: VQ-GNN.
+
+codebook.py        -- streaming EMA codebooks, product VQ, whitening (Alg. 2)
+message_passing.py -- approximated fwd/bwd message passing (Eq. 6/7),
+                      custom_vjp backward injection, probe-trick gradients
+conv.py            -- generalized graph convolution operands (Table 1/5)
+bounds.py          -- Theorem 2 / Corollary 3 as executable checks
+"""
+from repro.core.codebook import (CodebookConfig, CodebookState, init_codebook,
+                                 kmeanspp_init)
+from repro.core.conv import (ConvOperands, LayerVQState, MinibatchPack,
+                             fixed_conv_operands, init_layer_vq_state,
+                             out_of_batch_cluster_mass, refresh_assignment)
+from repro.core.message_passing import (approx_message_passing,
+                                        inject_context_grad, reconstruct)

@@ -1,0 +1,58 @@
+"""Error bounds of Theorem 2 / Corollary 3, as executable checks.
+
+    || X^_B^(l+1) - X_B^(l+1) ||_F
+        <= eps^(l) (1 + O(Lip(h))) Lip(sigma) ||C|| ||X|| ||W||     (Thm 2)
+
+    || grad^_X_B - grad_X_B ||_F
+        <= eps^(l) (1 + O(Lip(h))) sigma'_max ||C|| ||grad_X^(l+1)|| ||W||
+                                                                    (Cor 3)
+
+Used by tests/test_bounds.py (hypothesis sweeps) and by the convergence
+benchmark to report the measured eps per layer during training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fro(x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def vq_relative_error(x: jax.Array, x_recon: jax.Array) -> jax.Array:
+    """eps = ||X - R X~||_F / ||X||_F."""
+    return fro(x - x_recon) / jnp.maximum(fro(x), 1e-12)
+
+
+def feature_error_bound(eps: jax.Array, c_fro: jax.Array, x_fro: jax.Array,
+                        w_fro: jax.Array, lip_sigma: float = 1.0,
+                        lip_h: float = 0.0) -> jax.Array:
+    """Theorem 2 right-hand side.  lip_h = 0 for fixed convolutions."""
+    return eps * (1.0 + lip_h) * lip_sigma * c_fro * x_fro * w_fro
+
+
+def gradient_error_bound(eps: jax.Array, c_fro: jax.Array, g_fro: jax.Array,
+                         w_fro: jax.Array, sigma_prime_max: float = 1.0,
+                         lip_h: float = 0.0) -> jax.Array:
+    """Corollary 3 right-hand side."""
+    return eps * (1.0 + lip_h) * sigma_prime_max * c_fro * g_fro * w_fro
+
+
+def lipschitz_leaky_relu(negative_slope: float = 0.2) -> float:
+    return max(1.0, negative_slope)
+
+
+def gat_h_lipschitz(w: jax.Array, a: jax.Array,
+                    negative_slope: float = 0.2,
+                    score_clip: float = 5.0) -> jax.Array:
+    """Upper bound on Lip(h) for the (Lipschitz-regularized) GAT score
+
+        h(x_i, x_j) = exp(clip(LeakyReLU([x_i W || x_j W] . a), +-c))
+
+    Following the paper's App. E Lipschitz regularization (after [47]):
+    clipping the pre-exp score to [-c, c] bounds the exp's local Lipschitz
+    constant by e^c, and the inner map's by ||W|| ||a||.
+    """
+    return jnp.exp(score_clip) * lipschitz_leaky_relu(negative_slope) * \
+        jnp.linalg.norm(w) * jnp.linalg.norm(a)

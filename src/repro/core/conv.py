@@ -1,0 +1,151 @@
+"""Generalized graph convolution (paper Sec. 2, Eq. 1-2) operand builders.
+
+A convolution matrix ``C^(s)`` is either *fixed* (GCN / SAGE-Mean / GIN / GDC
+-- entries derivable from the adjacency structure and degrees) or *learnable*
+(GAT / Graph-Transformer -- ``C_ij = frak_C_ij * h_theta(X_i, X_j)``,
+optionally row-normalized).
+
+This module converts a mini-batch "pack" (padded neighbor lists produced by
+the graph pipeline) + the current VQ state into the per-convolution
+:class:`~repro.core.message_passing.ConvOperands`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codebook import CodebookState, CodebookConfig
+from repro.core.message_passing import ConvOperands
+
+
+class MinibatchPack(NamedTuple):
+    """Device-side mini-batch of nodes with padded (ELLPACK) neighbor lists.
+
+    Produced by ``repro.graph.batching``; all shapes static per dataset.
+    ``nbr_*`` are the in-edges (messages INTO batch nodes, forward pass);
+    ``rev_*`` are the out-edges (messages FROM batch nodes -- the "blue"
+    backward messages of Fig. 2).  Positions are the index inside the batch
+    if the other endpoint is also in the batch, else -1.
+    """
+    batch_ids: jax.Array   # [b]      global node ids
+    nbr_ids: jax.Array     # [b, D]   in-neighbor global ids (0 on padding)
+    nbr_mask: jax.Array    # [b, D]   1.0 on real edges
+    nbr_pos: jax.Array     # [b, D]   in-batch position or -1
+    rev_ids: jax.Array     # [b, Dr]  out-edge target global ids
+    rev_mask: jax.Array    # [b, Dr]
+    rev_pos: jax.Array     # [b, Dr]
+
+    @property
+    def b(self) -> int:
+        return self.batch_ids.shape[0]
+
+
+class LayerVQState(NamedTuple):
+    """Per-layer streaming VQ state: codebook + global assignment table."""
+    codebook: CodebookState
+    assignment: jax.Array  # [n_branches, n] int32  codeword id of every node
+    counts: jax.Array      # [n_branches, k] f32    histogram of `assignment`
+
+
+def refresh_assignment(state: LayerVQState, batch_ids: jax.Array,
+                       new_assign: jax.Array) -> LayerVQState:
+    """Scatter the refreshed batch assignments into the global table
+    (Alg. 1 line 16, 'synchronize the codeword assignment matrix')."""
+    k = state.counts.shape[-1]
+    old = state.assignment[:, batch_ids]                        # [nb, b]
+    counts = state.counts \
+        - jax.vmap(lambda o: jnp.zeros((k,)).at[o].add(1.0))(old) \
+        + jax.vmap(lambda nw: jnp.zeros((k,)).at[nw].add(1.0))(new_assign)
+    assignment = state.assignment.at[:, batch_ids].set(new_assign)
+    return LayerVQState(state.codebook, assignment, counts)
+
+
+def init_layer_vq_state(key: jax.Array, n_nodes: int, f_feat: int,
+                        f_grad: int, cfg: CodebookConfig) -> LayerVQState:
+    from repro.core.codebook import init_codebook
+    cb = init_codebook(key, f_feat, f_grad, cfg)
+    assignment = jax.random.randint(
+        key, (cb.n_branches, n_nodes), 0, cfg.k).astype(jnp.int32)
+    counts = jax.vmap(
+        lambda a: jnp.zeros((cfg.k,)).at[a].add(1.0))(assignment)
+    return LayerVQState(cb, assignment, counts)
+
+
+# ---------------------------------------------------------------------------
+# fixed convolution edge values (paper Table 1)
+# ---------------------------------------------------------------------------
+
+def fixed_edge_values(kind: str, pack: MinibatchPack,
+                      degrees: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Edge values of a fixed convolution for a mini-batch.
+
+    kind:
+      'gcn'  : C = D~^-1/2 A~ D~^-1/2  (self-loop handled via `self_vals`)
+      'mean' : C = D^-1 A              (SAGE-Mean aggregator)
+      'adj'  : C = A                   (GIN aggregation / GAT mask)
+    degrees: [n] float -- raw degrees (no self loop).
+
+    Returns (in_vals, out_vals, rev_vals, self_vals):
+      in_vals/out_vals split the forward in-edge values by in/out-of-batch;
+      rev_vals are the C_{j,i} values on out-edges to out-of-batch targets;
+      self_vals [b] is the diagonal (self-loop) weight, 0 if none.
+    """
+    deg_i = degrees[pack.batch_ids]                       # [b]
+    deg_in = degrees[pack.nbr_ids]                        # [b, D]
+    deg_rev = degrees[pack.rev_ids]                       # [b, Dr]
+
+    if kind == 'gcn':
+        dt_i = deg_i + 1.0
+        vals = pack.nbr_mask / jnp.sqrt(dt_i[:, None] * (deg_in + 1.0))
+        rev = pack.rev_mask / jnp.sqrt((deg_rev + 1.0) * dt_i[:, None])
+        self_vals = 1.0 / dt_i
+    elif kind == 'mean':
+        vals = pack.nbr_mask / jnp.maximum(deg_i, 1.0)[:, None]
+        rev = pack.rev_mask / jnp.maximum(deg_rev, 1.0)
+        self_vals = jnp.zeros_like(deg_i)
+    elif kind == 'adj':
+        vals = pack.nbr_mask
+        rev = pack.rev_mask
+        self_vals = jnp.zeros_like(deg_i)
+    else:
+        raise ValueError(f"unknown fixed conv kind: {kind}")
+
+    in_vals = jnp.where(pack.nbr_pos >= 0, vals, 0.0)
+    out_vals = jnp.where(pack.nbr_pos < 0, vals, 0.0)
+    # only out-of-batch reverse targets are injected (in-batch ones are
+    # handled exactly by autodiff through the intra term)
+    rev_vals = jnp.where(pack.rev_pos < 0, rev, 0.0)
+    return in_vals, out_vals, rev_vals, self_vals
+
+
+def fixed_conv_operands(kind: str, pack: MinibatchPack,
+                        degrees: jax.Array) -> tuple[ConvOperands, jax.Array]:
+    in_vals, out_vals, rev_vals, self_vals = fixed_edge_values(
+        kind, pack, degrees)
+    ops_ = ConvOperands(
+        in_pos=pack.nbr_pos, in_vals=in_vals,
+        out_ids=pack.nbr_ids, out_vals=out_vals,
+        rev_ids=pack.rev_ids, rev_vals=rev_vals)
+    return ops_, self_vals
+
+
+# ---------------------------------------------------------------------------
+# dense/global convolution sketch masses (Graph-Transformer; paper Table 5)
+# ---------------------------------------------------------------------------
+
+def out_of_batch_cluster_mass(state: LayerVQState,
+                              batch_ids: jax.Array) -> jax.Array:
+    """fraC~_out for the all-ones mask of global attention: [n_branches, k].
+
+    For a dense convolution the fixed mask is all-ones, so the sketch
+    ``frak_C_out R`` reduces per row to the out-of-batch cluster sizes
+    (global histogram minus the batch members' clusters) -- O(k) instead of
+    O(n), the paper's key win for global-context GNNs.
+    """
+    k = state.counts.shape[-1]
+    batch_assign = state.assignment[:, batch_ids]         # [nb, b]
+    batch_counts = jax.vmap(
+        lambda a: jnp.zeros((k,)).at[a].add(1.0))(batch_assign)
+    return jnp.maximum(state.counts - batch_counts, 0.0)

@@ -1,0 +1,186 @@
+"""Approximated forward & backward message passing (paper Eq. 6 / Eq. 7).
+
+The paper splits the messages of a mini-batch into
+  * intra-batch messages  C_in X_B            -- computed exactly,
+  * out-of-batch messages C~_out X~           -- approximated via codewords,
+and back-propagates with the *transposed* approximated weight matrix, using
+gradient codewords G~ for the "blue" messages that flow from out-of-batch
+nodes (Fig. 2).  Autodiff cannot produce that rule (the codebook is streaming
+EMA state), so the backward injection is a ``jax.custom_vjp``.
+
+Two implementation forms, mathematically identical (DESIGN.md section 3):
+  * reconstruction form (sparse convolutions): out-of-batch neighbor j's
+    features are reconstructed from its per-branch codewords,
+    X^_j = concat_beta X~^beta[R^beta[j]], and messages are passed per edge --
+    this is the paper's App. E "another implementation" and equals the
+    [b, k] sketch because  sum_j C_ij X^_j = sum_v (C_out R)_iv X~_v.
+  * sketch form (dense/global convolutions, VQ-Attention): the [b, k]
+    cluster-level mixing matrix C~_out = C_out R directly.
+
+Gradient extraction for the codebook update uses the *probe trick*: a zeros
+input added at the pre-activation; its cotangent under jax.grad is exactly
+G^(l+1) = grad_Z loss (Alg. 1 line 15 needs it for the VQ update).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# the custom backward rule (Eq. 7's out-of-batch gradient messages)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def inject_context_grad(x_b: jax.Array, rev_vals: jax.Array,
+                        grad_hat: jax.Array, w: Optional[jax.Array]) -> jax.Array:
+    """Identity on ``x_b`` in the forward pass.
+
+    In the backward pass, adds the paper's out-of-batch gradient messages
+
+        grad_X_B  +=  ( sum_d rev_vals[:, d] * grad_hat[:, d, :] ) @ W^T
+
+    where ``rev_vals[i, d] = C_{j_d, i}`` are the weights of the reverse
+    (batch -> out-of-batch) edges and ``grad_hat[i, d] = G~[c(j_d)]`` are the
+    reconstructed gradient codewords of the receiving nodes.  This is the
+    ``D_out G~ W^T`` term of Eq. 7 (``D_out = (C^T)_out R``).
+
+    ``w=None`` skips the W^T factor -- used by row-normalized convolutions
+    where the probe (and hence the gradient codewords) live at the
+    pre-normalization message level (paper App. E decoupling trick).
+    """
+    del rev_vals, grad_hat, w
+    return x_b
+
+
+def _inject_fwd(x_b, rev_vals, grad_hat, w):
+    return x_b, (rev_vals, grad_hat, w)
+
+
+def _inject_bwd(res, g):
+    rev_vals, grad_hat, w = res
+    phantom = jnp.einsum('bd,bdf->bf', rev_vals.astype(jnp.float32),
+                         grad_hat.astype(jnp.float32))
+    if w is not None:
+        phantom = phantom @ w.astype(jnp.float32).T
+    return (g + phantom.astype(g.dtype), jnp.zeros_like(rev_vals),
+            jnp.zeros_like(grad_hat),
+            None if w is None else jnp.zeros_like(w))
+
+
+inject_context_grad.defvjp(_inject_fwd, _inject_bwd)
+
+
+# ---------------------------------------------------------------------------
+# codeword reconstruction (gather per-branch codewords, merge to full width)
+# ---------------------------------------------------------------------------
+
+def reconstruct(codewords: jax.Array, assignment: jax.Array,
+                node_ids: jax.Array) -> jax.Array:
+    """Rebuild full-width vectors for arbitrary nodes from product-VQ state.
+
+    codewords:  [n_branches, k, f_blk]  (feature *or* gradient codewords)
+    assignment: [n_branches, n]         per-branch codeword ids of all nodes
+    node_ids:   [...] int               global node ids to reconstruct
+    returns     [..., n_branches * f_blk]
+    """
+    n_branches = codewords.shape[0]
+    ids = assignment[:, node_ids]                       # [nb, ...]
+    gathered = jax.vmap(lambda cw, a: cw[a])(codewords, ids)  # [nb, ..., f_blk]
+    out = jnp.moveaxis(gathered, 0, -2)                 # [..., nb, f_blk]
+    return out.reshape(*out.shape[:-2], n_branches * codewords.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# forward context messages
+# ---------------------------------------------------------------------------
+
+def context_messages_reconstruct(out_vals: jax.Array, out_ids: jax.Array,
+                                 feat_codewords: jax.Array,
+                                 assignment: jax.Array) -> jax.Array:
+    """Out-of-batch forward messages, reconstruction form.
+
+    out_vals: [b, D]   C_{i, j_d} for out-of-batch neighbors (0 = padding)
+    out_ids:  [b, D]   their global node ids
+    feat_codewords: [n_branches, k, f_blk];  assignment: [n_branches, n]
+    returns   [b, f]   =  sum_d out_vals[:, d] * X^_{j_d}
+    """
+    feats_hat = reconstruct(feat_codewords, assignment, out_ids)   # [b, D, f]
+    feats_hat = jax.lax.stop_gradient(feats_hat)
+    return jnp.einsum('bd,bdf->bf', out_vals.astype(jnp.float32),
+                      feats_hat.astype(jnp.float32))
+
+
+def context_messages_sketch(c_out_sketch: jax.Array,
+                            feat_codewords: jax.Array) -> jax.Array:
+    """Out-of-batch forward messages, sketch form (dense convolutions).
+
+    c_out_sketch:  [n_branches, b, k]   C~_out = C_out R, per branch
+    feat_codewords:[n_branches, k, f_blk]
+    returns        [b, n_branches * f_blk]
+    """
+    cw = jax.lax.stop_gradient(feat_codewords.astype(jnp.float32))
+    per_branch = jnp.einsum('nbk,nkf->nbf',
+                            c_out_sketch.astype(jnp.float32), cw)
+    nb, b, fb = per_branch.shape
+    return per_branch.transpose(1, 0, 2).reshape(b, nb * fb)
+
+
+# ---------------------------------------------------------------------------
+# exact intra-batch messages
+# ---------------------------------------------------------------------------
+
+def intra_messages(in_pos: jax.Array, in_vals: jax.Array,
+                   x_b: jax.Array) -> jax.Array:
+    """Exact intra-mini-batch messages  C_in X_B.
+
+    in_pos:  [b, D] int32 -- neighbor position inside the batch (-1 padding /
+             out-of-batch; those slots must carry in_vals == 0)
+    in_vals: [b, D]
+    x_b:     [b, f]
+    """
+    idx = jnp.maximum(in_pos, 0)
+    return kops.spmm_ell(idx, in_vals, x_b)
+
+
+# ---------------------------------------------------------------------------
+# the assembled approximated message passing of one convolution
+# ---------------------------------------------------------------------------
+
+class ConvOperands(NamedTuple):
+    """Per-mini-batch operands of one convolution's approximated MP.
+
+    Built by ``repro.core.conv`` from the mini-batch pack + current VQ state.
+    """
+    in_pos: jax.Array      # [b, D]   intra-batch neighbor positions (-1 pad)
+    in_vals: jax.Array     # [b, D]   C_in values (0 on padding)
+    out_ids: jax.Array     # [b, D]   out-of-batch neighbor global ids
+    out_vals: jax.Array    # [b, D]   C_out values (0 on padding)
+    rev_ids: jax.Array     # [b, Dr]  reverse-edge (batch -> out) target ids
+    rev_vals: jax.Array    # [b, Dr]  C^T_out values (0 on padding)
+
+
+def approx_message_passing(ops_: ConvOperands, x_b: jax.Array,
+                           feat_codewords: jax.Array,
+                           grad_codewords: jax.Array,
+                           assignment: jax.Array,
+                           w: Optional[jax.Array],
+                           inject: bool = True) -> jax.Array:
+    """Full Eq. 6 forward with the Eq. 7 backward injection attached.
+
+    Returns M = C_in X_B + C~_out X~  of shape [b, f]; its cotangent under
+    autodiff is  C_in^T G_B (+ exact learnable-h paths)  and the custom rule
+    adds  D_out G~ (W^T).
+    """
+    if inject:
+        grad_hat = reconstruct(grad_codewords, assignment, ops_.rev_ids)
+        grad_hat = jax.lax.stop_gradient(grad_hat)      # [b, Dr, f_grad]
+        x_b = inject_context_grad(x_b, ops_.rev_vals, grad_hat, w)
+    m = intra_messages(ops_.in_pos, ops_.in_vals, x_b)
+    m = m + context_messages_reconstruct(
+        ops_.out_vals, ops_.out_ids, feat_codewords, assignment)
+    return m

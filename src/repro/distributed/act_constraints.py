@@ -1,0 +1,52 @@
+"""Activation sharding constraints (GSPMD guidance).
+
+Contracting a batch-sharded activation with an FSDP-sharded weight gives
+GSPMD two competing uses of the data axes; left to itself it sometimes
+re-shards the ACTIVATION (replicating the batch -- observed +20 GiB/chip on
+the 405B cell, Perf iteration 5c) instead of all-gathering the weight.
+Pinning the activation sharding at block boundaries forces the correct
+resolution.
+
+The policy is process-global and set by the launcher/dry-run before
+lowering; when unset (unit tests, single-device smoke) every call is a
+no-op, so the model code stays device-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_POLICY: Optional[tuple] = None   # (mesh, batch_axes)
+
+
+def set_policy(mesh: Mesh, batch_axes) -> None:
+    global _POLICY
+    _POLICY = (mesh, batch_axes)
+
+
+def clear_policy() -> None:
+    global _POLICY
+    _POLICY = None
+
+
+def constrain_tokens(x: jax.Array) -> jax.Array:
+    """Pin [batch, seq, d_model] activations: batch over the data axes,
+    seq/d replicated (Megatron layout; the TP all-reduces handle d)."""
+    if _POLICY is None or x.ndim < 2:
+        return x
+    mesh, batch_axes = _POLICY
+    if x.shape[0] % _axes_size(mesh, batch_axes) != 0:
+        return x
+    spec = P(batch_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _axes_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s

@@ -1,0 +1,60 @@
+"""Weight-only int8 quantization for serving (beyond-paper lever).
+
+Decode is memory-bound on the weight stream (EXPERIMENTS.md deep-dive 3);
+per-output-channel int8 storage halves the bytes/step vs bf16.  On TPU the
+int8->bf16 convert fuses into the MXU feed; numerically the per-channel
+scale keeps matmul outputs within ~0.5% of bf16 (test_quantization.py).
+
+Applied at the params-pytree level: every >=2D weight leaf becomes
+(int8 values, f32 per-channel scales); 1D scales/norms stay bf16.
+``dequantize_tree`` restores a dense pytree for the unmodified model code
+-- under jit, XLA keeps the int8 buffers as the stored representation and
+materializes bf16 tiles on the fly.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array        # int8, same shape as the original
+    scale: jax.Array    # f32 [..., 1, out] per-output-channel scales
+
+
+def quantize_tensor(w: jax.Array) -> QTensor:
+    """Per-output-channel (last axis) symmetric int8."""
+    w32 = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=tuple(range(w.ndim - 1)),
+                   keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def dequantize_tensor(t: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return (t.q.astype(jnp.float32) * t.scale).astype(dtype)
+
+
+def _is_weight(leaf) -> bool:
+    return hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
+        leaf.dtype in (jnp.float32, jnp.bfloat16)
+
+
+def quantize_tree(params: Any) -> Any:
+    """int8-quantize every >=2D float leaf of a params pytree."""
+    return jax.tree_util.tree_map(
+        lambda w: quantize_tensor(w) if _is_weight(w) else w, params)
+
+
+def dequantize_tree(qparams: Any, dtype=jnp.bfloat16) -> Any:
+    return jax.tree_util.tree_map(
+        lambda t: dequantize_tensor(t, dtype) if isinstance(t, QTensor)
+        else t, qparams, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def tree_bytes(params: Any) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,109 @@
+"""Host-side mini-batch packing: Graph -> MinibatchPack (static ELL shapes).
+
+The packer is the only host<->device seam of the graph path: it ships, per
+mini-batch, Theta(b * D) integers/floats -- batch features, padded neighbor
+ids, in-batch positions -- never O(n).  At pod scale this runs per-host on
+its data shard; here it is a numpy routine feeding jit'd steps.
+"""
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.conv import MinibatchPack
+from repro.graph.structure import CSR, Graph
+
+
+def _pack_rows(csr: CSR, ids: np.ndarray, deg_cap: int,
+               inv: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    b = len(ids)
+    nbr = np.zeros((b, deg_cap), np.int32)
+    mask = np.zeros((b, deg_cap), np.float32)
+    pos = np.full((b, deg_cap), -1, np.int32)
+    for r, i in enumerate(ids):
+        ns = csr.neighbors(i)[:deg_cap]
+        d = len(ns)
+        nbr[r, :d] = ns
+        mask[r, :d] = 1.0
+        pos[r, :d] = inv[ns]
+    return nbr, mask, pos
+
+
+def make_pack(g: Graph, batch_ids: np.ndarray, deg_cap: int | None = None
+              ) -> MinibatchPack:
+    deg_cap = deg_cap or g.max_degree()
+    inv = np.full(g.n, -1, np.int32)
+    inv[batch_ids] = np.arange(len(batch_ids), dtype=np.int32)
+    nbr, nmask, npos = _pack_rows(g.in_csr, batch_ids, deg_cap, inv)
+    rev, rmask, rpos = _pack_rows(g.out_csr, batch_ids, deg_cap, inv)
+    return MinibatchPack(
+        batch_ids=jnp.asarray(batch_ids.astype(np.int32)),
+        nbr_ids=jnp.asarray(nbr), nbr_mask=jnp.asarray(nmask),
+        nbr_pos=jnp.asarray(npos),
+        rev_ids=jnp.asarray(rev), rev_mask=jnp.asarray(rmask),
+        rev_pos=jnp.asarray(rpos))
+
+
+class FullGraphOperands(NamedTuple):
+    """Whole-(sub)graph ELL operands for exact message passing.
+
+    Used by the full-graph oracle, the sampling baselines (on their sampled
+    subgraphs) and the inference path.  NamedTuple -> a jit-able pytree.
+    """
+    nbr_ids: jnp.ndarray    # [n, D]
+    nbr_mask: jnp.ndarray   # [n, D]
+    degrees: jnp.ndarray    # [n]
+
+
+def full_operands(g: Graph, deg_cap: int | None = None) -> FullGraphOperands:
+    deg_cap = deg_cap or g.max_degree()
+    inv = np.arange(g.n, dtype=np.int32)   # every node is "in batch"
+    ids = np.arange(g.n)
+    nbr, mask, _ = _pack_rows(g.in_csr, ids, deg_cap, inv)
+    return FullGraphOperands(
+        nbr_ids=jnp.asarray(nbr), nbr_mask=jnp.asarray(mask),
+        degrees=jnp.asarray(g.degrees()))
+
+
+def subgraph_operands(src: np.ndarray, dst: np.ndarray, n_sub: int,
+                      deg_cap: int) -> FullGraphOperands:
+    from repro.graph.structure import csr_from_coo
+    csr = csr_from_coo(src.astype(np.int64), dst.astype(np.int64), n_sub)
+    inv = np.arange(n_sub, dtype=np.int32)
+    nbr, mask, _ = _pack_rows(csr, np.arange(n_sub), deg_cap, inv)
+    return FullGraphOperands(
+        nbr_ids=jnp.asarray(nbr), nbr_mask=jnp.asarray(mask),
+        degrees=jnp.asarray(csr.degrees()))
+
+
+def inductive_view(g: Graph) -> Graph:
+    """Training view for the inductive setting (PPI): val/test nodes and all
+    their edges are invisible during training (paper Sec. 6)."""
+    visible = np.zeros(g.n, bool)
+    visible[g.train_idx] = True
+    keep_src, keep_dst = [], []
+    for i in np.where(visible)[0]:
+        ns = g.in_csr.neighbors(i)
+        ns = ns[visible[ns]]
+        keep_src.append(ns)
+        keep_dst.append(np.full(len(ns), i, np.int64))
+    src = np.concatenate(keep_src) if keep_src else np.zeros(0, np.int64)
+    dst = np.concatenate(keep_dst) if keep_dst else np.zeros(0, np.int64)
+    from repro.graph.structure import build_graph
+    return build_graph(src, dst, g.n, g.features, g.labels,
+                       (g.train_idx, g.val_idx, g.test_idx),
+                       multilabel=g.multilabel, name=g.name + "-inductive")
+
+
+def minibatch_stream(g: Graph, batch_size: int, rng: np.random.Generator,
+                     idx_pool: np.ndarray | None = None,
+                     deg_cap: int | None = None) -> Iterator[MinibatchPack]:
+    """Random-node mini-batches covering the pool once per epoch (the
+    paper's default sampling strategy; App. G shows edge/RW sampling give
+    the same accuracy)."""
+    pool = idx_pool if idx_pool is not None else np.arange(g.n)
+    perm = rng.permutation(pool)
+    for s in range(0, len(perm) - batch_size + 1, batch_size):
+        yield make_pack(g, perm[s:s + batch_size], deg_cap)

@@ -1,0 +1,109 @@
+"""The paper's sampling baselines (Sec. 5 / Table 2): NS-SAGE, Cluster-GCN,
+GraphSAINT-RW.
+
+Each sampler yields (src, dst, nodes) induced-subgraph triples; the baseline
+trainer runs exact message passing on the sampled subgraph (which is exactly
+what makes them drop messages -- the effect Table 4 measures).  Inference for
+all samplers is full-neighborhood (their O(d^L) inference cost, Sec. 5).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+from repro.graph.structure import Graph, induced_subgraph
+
+
+def ns_sage_batches(g: Graph, batch_size: int, fanouts: list[int],
+                    rng: np.random.Generator,
+                    idx_pool: np.ndarray) -> Iterator[tuple]:
+    """NS-SAGE [2]: per-layer fixed-fanout neighbor sampling.
+
+    Returns the union of sampled L-hop neighborhoods as an induced subgraph
+    plus the seed positions (loss is only on seeds).  Faithful to the
+    O(b r^L) node blow-up of Table 2.
+    """
+    perm = rng.permutation(idx_pool)
+    for s in range(0, len(perm) - batch_size + 1, batch_size):
+        seeds = perm[s:s + batch_size]
+        frontier = seeds
+        nodes = set(seeds.tolist())
+        for r in fanouts:
+            nxt = []
+            for i in frontier:
+                ns = g.in_csr.neighbors(i)
+                if len(ns) > r:
+                    ns = rng.choice(ns, r, replace=False)
+                nxt.extend(ns.tolist())
+            frontier = np.array(list(set(nxt) - nodes), np.int64)
+            nodes.update(nxt)
+        sub_nodes = np.array(sorted(nodes), np.int64)
+        src, dst, sub_nodes = induced_subgraph(g, sub_nodes)
+        seed_pos = np.searchsorted(sub_nodes, seeds)
+        yield src, dst, sub_nodes, seed_pos
+
+
+def partition_graph(g: Graph, n_parts: int,
+                    rng: np.random.Generator) -> np.ndarray:
+    """Locality-aware partition for Cluster-GCN (METIS stand-in).
+
+    Multi-source BFS from random seeds: each partition grows around a seed,
+    which on SBM-style graphs recovers community structure similarly to
+    METIS (the property Cluster-GCN depends on).  O(m).
+    """
+    part = np.full(g.n, -1, np.int64)
+    seeds = rng.choice(g.n, n_parts, replace=False)
+    from collections import deque
+    queues = [deque([s]) for s in seeds]
+    part[seeds] = np.arange(n_parts)
+    active = True
+    while active:
+        active = False
+        for p in range(n_parts):
+            q = queues[p]
+            steps = 0
+            while q and steps < 64:
+                i = q.popleft()
+                for j in g.in_csr.neighbors(i):
+                    if part[j] < 0:
+                        part[j] = p
+                        q.append(int(j))
+                        steps += 1
+                active = active or steps > 0
+    unassigned = np.where(part < 0)[0]
+    if len(unassigned):
+        part[unassigned] = rng.integers(0, n_parts, len(unassigned))
+    return part
+
+
+def cluster_gcn_batches(g: Graph, partition: np.ndarray, parts_per_batch: int,
+                        rng: np.random.Generator) -> Iterator[tuple]:
+    """Cluster-GCN [9]: sample partitions, train on their union subgraph
+    (with between-cluster edges inside the union added back)."""
+    n_parts = partition.max() + 1
+    order = rng.permutation(n_parts)
+    for s in range(0, n_parts - parts_per_batch + 1, parts_per_batch):
+        chosen = order[s:s + parts_per_batch]
+        nodes = np.where(np.isin(partition, chosen))[0]
+        src, dst, nodes = induced_subgraph(g, nodes)
+        yield src, dst, nodes, np.arange(len(nodes))
+
+
+def graphsaint_rw_batches(g: Graph, roots: int, walk_length: int,
+                          rng: np.random.Generator,
+                          idx_pool: np.ndarray) -> Iterator[tuple]:
+    """GraphSAINT-RW [10]: random-walk induced subgraphs."""
+    perm = rng.permutation(idx_pool)
+    for s in range(0, len(perm) - roots + 1, roots):
+        cur = perm[s:s + roots].copy()
+        nodes = set(cur.tolist())
+        for _ in range(walk_length):
+            for t in range(len(cur)):
+                ns = g.in_csr.neighbors(cur[t])
+                if len(ns):
+                    cur[t] = ns[rng.integers(0, len(ns))]
+                    nodes.add(int(cur[t]))
+        sub_nodes = np.array(sorted(nodes), np.int64)
+        src, dst, sub_nodes = induced_subgraph(g, sub_nodes)
+        yield src, dst, sub_nodes, np.arange(len(sub_nodes))

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute of VQ-GNN.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with jit'd dispatching wrappers in ops.py and pure-jnp oracles in
+ref.py.  Kernels: vq_assign (fused distance+argmin), spmm_ell (ELLPACK
+message passing), flash_attention (training attention), vq_attention
+(codebook + window decode attention).
+"""

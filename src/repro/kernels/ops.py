@@ -1,0 +1,66 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+On a TPU backend the Pallas kernels run compiled; on the CPU host the system
+executes the pure-jnp oracles from ref.py (numerically identical -- the
+kernels are validated against them in interpret mode by tests/test_kernels_*).
+Set REPRO_FORCE_PALLAS=1 to route every call through the interpret-mode
+kernels instead (used by the kernel test sweeps and CI).
+
+Production notes (TPU):
+  * ``spmm_ell``: for n_src * f beyond VMEM the source matrix lives in
+    memory_space=ANY and rows are DMA'd in double-buffered stripes keyed by a
+    scalar-prefetched tile->rows index (PrefetchScalarGridSpec); the resident
+    variant here is the validated core loop.
+  * ``flash_attention``: 32k+ sequences use a (bh, nq, nk) grid with carried
+    scratch instead of the resident-KV loop.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.vq_assign import vq_assign_pallas
+from repro.kernels.spmm_ell import spmm_ell_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.vq_attention import vq_attention_decode_pallas
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS", "0") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
+    if _use_pallas():
+        return vq_assign_pallas(
+            x, codewords, interpret=jax.default_backend() != "tpu")
+    return ref.vq_assign(x, codewords)
+
+
+def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array) -> jax.Array:
+    if _use_pallas():
+        return spmm_ell_pallas(
+            nbr_idx, nbr_val, x, interpret=jax.default_backend() != "tpu")
+    return ref.spmm_ell(nbr_idx, nbr_val, x)
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    if _use_pallas() and q.shape[2] % 128 == 0 and q.shape[-1] % 8 == 0:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, interpret=jax.default_backend() != "tpu")
+    return ref.flash_attention(q, k, v, causal=causal)
+
+
+def vq_attention_decode(q, cb_k, cb_v, mass, win_k, win_v, win_mask):
+    if _use_pallas():
+        return vq_attention_decode_pallas(
+            q, cb_k, cb_v, mass, win_k, win_v, win_mask,
+            interpret=jax.default_backend() != "tpu")
+    return jax.vmap(
+        lambda qq, ck, cv, m, wk, wv, wm: ref.vq_attention_decode(
+            qq, ck, cv, m, wk, wv, wm)
+    )(q, cb_k, cb_v, mass, win_k, win_v, win_mask)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the numerical ground truth the corresponding kernel is
+validated against (tests sweep shapes/dtypes and assert_allclose).  They are
+also the CPU execution path of ``ops.py`` -- on the CPU host the system runs
+these, on TPU the Pallas kernels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
+    """Nearest codeword by squared L2.  x: [b, f], codewords: [k, f] -> [b]."""
+    x32 = x.astype(jnp.float32)
+    c32 = codewords.astype(jnp.float32)
+    # |x - c|^2 = |x|^2 - 2 x.c + |c|^2 ; |x|^2 is constant per row.
+    scores = x32 @ c32.T                                  # [b, k]
+    dist = jnp.sum(c32 * c32, axis=1)[None, :] - 2.0 * scores
+    return jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+
+def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array) -> jax.Array:
+    """Padded-neighbor (ELLPACK) sparse @ dense.
+
+    nbr_idx: [b, D] int32 (padding entries may point anywhere, their val is 0)
+    nbr_val: [b, D] float
+    x:       [n_src, f]
+    returns  [b, f] with out[i] = sum_d val[i,d] * x[idx[i,d]]
+    """
+    gathered = x[nbr_idx]                                  # [b, D, f]
+    return jnp.einsum('bd,bdf->bf', nbr_val.astype(jnp.float32),
+                      gathered.astype(jnp.float32))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    sm_scale: float | None = None) -> jax.Array:
+    """Plain softmax attention.  q: [b, h, sq, d], k/v: [b, h, skv, d]."""
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum('bhqd,bhkd->bhqk', q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        sq, skv = q.shape[2], k.shape[2]
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum('bhqk,bhkd->bhqd', p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def vq_attention_decode(q: jax.Array, cb_k: jax.Array, cb_v: jax.Array,
+                        mass: jax.Array, win_k: jax.Array, win_v: jax.Array,
+                        win_mask: jax.Array, *,
+                        sm_scale: float | None = None) -> jax.Array:
+    """One decode step of VQ-Attention (paper Eq. 6 on the token graph).
+
+    The out-of-window context is represented by ``k`` codewords with cluster
+    masses m_v; a cluster of m identical keys contributes m * exp(q.k~) =
+    exp(q.k~ + log m) to the softmax denominator -- exactly the paper's
+    row-normalization trick (App. E: pad a ones column, normalize after).
+
+    q:        [g, d]      (q heads sharing this KV group)
+    cb_k/v:   [k, d]      codeword keys / values
+    mass:     [k]         cluster sizes (float)
+    win_k/v:  [w, d]      exact recent window
+    win_mask: [w]         1.0 for valid window slots
+    returns   [g, d]
+    """
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    q32 = q.astype(jnp.float32) * sm_scale
+    s_cb = q32 @ cb_k.astype(jnp.float32).T \
+        + jnp.log(jnp.maximum(mass, 1e-9))[None, :]        # [g, k]
+    s_cb = jnp.where(mass[None, :] > 0, s_cb, -jnp.inf)
+    s_w = q32 @ win_k.astype(jnp.float32).T                # [g, w]
+    s_w = jnp.where(win_mask[None, :] > 0, s_w, -jnp.inf)
+    s = jnp.concatenate([s_cb, s_w], axis=1)
+    p = jax.nn.softmax(s, axis=-1)
+    out = p[:, :cb_k.shape[0]] @ cb_v.astype(jnp.float32) \
+        + p[:, cb_k.shape[0]:] @ win_v.astype(jnp.float32)
+    return out.astype(q.dtype)

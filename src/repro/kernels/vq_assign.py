@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused pairwise-distance + running argmin (VQ assign).
+
+The hot inner loop of VQ-GNN: every mini-batch, every layer, every product-VQ
+branch assigns b vectors to their nearest of k codewords.  On GPU this is a
+cdist + argmin (two kernels + atotmic-free reduction); the TPU formulation is
+a single fused kernel:
+
+  * distance reduces to  |c|^2 - 2 x.c^T  (the |x|^2 term is constant per
+    row) so the dominant work is an MXU matmul of the [bb, f] x-tile against
+    the [kb, f] codeword tile;
+  * the argmin over k is carried across k-tiles as a running (min, argmin)
+    pair held in the (revisited) output block -- grid is (b/bb, k/kb) with
+    the k axis 'arbitrary' (sequential) so revisiting is legal.
+
+VMEM envelope per step: bb*f + kb*f + bb*kb floats.  Defaults bb=256, kb=512,
+f padded to a multiple of 128 (lane width) keep this < 1 MiB for f = 128.
+Callers pad: extra k rows get value 1e15 so they never win the argmin; extra
+b rows are sliced off by the wrapper in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vq_assign_kernel(x_ref, c_ref, val_ref, idx_ref, *, kb: int):
+    ki = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)                    # [bb, f]
+    c = c_ref[...].astype(jnp.float32)                    # [kb, f]
+    # MXU: scores[b, k] = x . c^T
+    scores = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    cn2 = jnp.sum(c * c, axis=1)                          # [kb]
+    dist = cn2[None, :] - 2.0 * scores                    # [bb, kb]
+
+    tile_min = jnp.min(dist, axis=1, keepdims=True)       # [bb, 1]
+    tile_arg = (jnp.argmin(dist, axis=1)[:, None] + ki * kb).astype(jnp.int32)
+
+    @pl.when(ki == 0)
+    def _init():
+        val_ref[...] = tile_min
+        idx_ref[...] = tile_arg
+
+    @pl.when(ki > 0)
+    def _combine():
+        prev = val_ref[...]
+        take = tile_min < prev
+        val_ref[...] = jnp.where(take, tile_min, prev)
+        idx_ref[...] = jnp.where(take, tile_arg, idx_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "kb", "interpret"))
+def vq_assign_pallas(x: jax.Array, codewords: jax.Array, *,
+                     bb: int = 256, kb: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """x: [b, f], codewords: [k, f] -> assignment [b] int32.
+
+    Handles all padding internally (b -> bb multiple, k -> kb multiple,
+    f -> multiple of 128 with zeros, which leaves distances unchanged).
+    """
+    b, f = x.shape
+    k = codewords.shape[0]
+    bb = min(bb, max(8, b))
+    kb = min(kb, max(8, k))
+
+    def rup(v, m):
+        return (v + m - 1) // m * m
+
+    bp, kp, fp = rup(b, bb), rup(k, kb), rup(f, 128)
+    xp = jnp.zeros((bp, fp), x.dtype).at[:b, :f].set(x)
+    # padded codewords sit far away -> never selected
+    cp = jnp.full((kp, fp), 1e15, jnp.float32).at[:k, :f].set(
+        codewords.astype(jnp.float32)).at[:k, f:].set(0.0)
+
+    grid = (bp // bb, kp // kb)
+    val, idx = pl.pallas_call(
+        functools.partial(_vq_assign_kernel, kb=kb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kb, fp), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp, cp)
+    del val
+    return idx[:b, 0]

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, and extract the roofline terms from the compiled HLO.
+
+MUST set XLA_FLAGS above before ANY other import (jax locks the device
+count on first init).  Never import this module from tests/benches.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per cell this produces <out>/<arch>__<shape>__<mesh>.json with:
+  memory_analysis (bytes/device), cost_analysis (flops, bytes accessed),
+  collective bytes by kind (parsed from the optimized HLO), lowering and
+  compile wall-times -- benchmarks/bench_roofline.py turns these into the
+  EXPERIMENTS.md roofline table.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.distributed import sharding as shd
+from repro.distributed.act_constraints import clear_policy, set_policy
+from repro.launch.input_specs import arch_for_cell, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.train.loop import make_train_step
+from repro.train.optimizer import adam
+
+# cells where exact attention at 500k is intentionally not built
+# (pure full-attention variant would be quadratic); VQ-Attention variants
+# run instead -- see input_specs.arch_for_cell.
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,4096]{1,0}' -> byte count (handles tuple shapes)."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the optimized HLO,
+    split by enclosing computation kind.
+
+    XLA's cost/HLO accounting counts a while-loop body ONCE regardless of
+    trip count, so collectives are attributed to 'entry' (top-level module,
+    executed once per step) vs 'loop' (inside a while/scan body, executed
+    trip-count times).  benchmarks/bench_roofline.py multiplies the 'loop'
+    bucket by the recorded trip hints and applies ring factors ((n-1)/n per
+    all-gather/reduce-scatter, 2(n-1)/n per all-reduce); here we record raw
+    payload bytes.
+    """
+    def empty():
+        return {k: 0 for k in _COLLECTIVES}
+    out = {"entry": empty(), "loop": empty()}
+    counts = {"entry": empty(), "loop": empty()}
+    bucket = "entry"
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY"):
+            bucket = "entry"
+            continue
+        mc = re.match(r"%?(\S+)\s*\([^)]*\)\s*->", ls)  # computation header
+        if mc and "=" not in ls.split("(")[0]:
+            name = mc.group(1)
+            bucket = "loop" if ("while" in name or "body" in name
+                                or "cond" in name or "scan" in name) \
+                else "entry"
+            continue
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)", ls)
+        if m:
+            out[bucket][m.group(2)] += _shape_bytes(m.group(1))
+            counts[bucket][m.group(2)] += 1
+    total = {k: out["entry"][k] + out["loop"][k] for k in _COLLECTIVES}
+    return {"bytes": total, "entry_bytes": out["entry"],
+            "loop_bytes": out["loop"], "counts": counts}
+
+
+def trip_hints(cfg, sh, arch: str) -> dict:
+    """Static trip counts of the scans in this cell's program -- needed to
+    de-bias cost_analysis / per-loop collective counts (XLA counts loop
+    bodies once).  layer_trips = executions of the (innermost) layer body
+    per microbatch; accum = microbatch scan trips."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        layer_trips = cfg.n_layers
+    elif fam == "vlm":
+        layer_trips = cfg.n_layers          # inner text scan x outer groups
+    elif fam == "audio":
+        layer_trips = cfg.n_layers + cfg.enc_layers
+    elif fam == "ssm":
+        layer_trips = cfg.n_layers // 2     # scan over (mLSTM,sLSTM) pairs
+    else:                                   # hybrid
+        layer_trips = cfg.n_layers
+    accum = 1
+    if sh["kind"] == "train":
+        # fit-constrained accum (EXPERIMENTS.md deep-dive 1: 405B at
+        # accum=8 reaches fraction 0.90 but 24.8 GiB > v5e HBM; accum=16
+        # fits at 16.0 GiB with fraction ~0.71)
+        accum = {"llama3-405b": 16, "qwen3-32b": 8,
+                 "qwen3-moe-30b-a3b": 8, "granite-3-8b": 8,
+                 "zamba2-2.7b": 8, "llama3.2-3b": 8, "xlstm-350m": 8,
+                 "phi3.5-moe-42b-a6.6b": 8}.get(arch, 4)
+    inner = 1
+    if sh["kind"] in ("train", "prefill"):
+        if cfg.vq_attn:
+            inner = max(1, sh["seq_len"] // cfg.vq_window)
+        else:
+            inner = max(1, sh["seq_len"] // 1024)   # query-chunk scan
+    return {"layer_trips": layer_trips, "accum": accum,
+            "inner_attn_trips": inner}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force_vq: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + ("__vq" if force_vq
+                                                      else "")
+    t_start = time.time()
+    base_cfg = ARCHS[arch]
+    if force_vq:
+        base_cfg = base_cfg.with_vq()
+    cfg = arch_for_cell(base_cfg, shape_name)
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    strategy = shd.strategy_for(cfg, mesh)
+    from repro.launch.mesh import dp_axes
+    if sh["kind"] in ("train", "prefill") and strategy in ("tp_fsdp",
+                                                           "moe_ep_dp"):
+        set_policy(mesh, dp_axes(mesh))
+    else:
+        clear_policy()
+
+    specs = input_specs(base_cfg, shape_name)
+
+    if sh["kind"] == "train":
+        # microbatch so per-device activations fit (DESIGN.md section 5)
+        # fit-constrained accum (EXPERIMENTS.md deep-dive 1: 405B at
+        # accum=8 reaches fraction 0.90 but 24.8 GiB > v5e HBM; accum=16
+        # fits at 16.0 GiB with fraction ~0.71)
+        accum = {"llama3-405b": 16, "qwen3-32b": 8,
+                 "qwen3-moe-30b-a3b": 8, "granite-3-8b": 8,
+                 "zamba2-2.7b": 8, "llama3.2-3b": 8, "xlstm-350m": 8,
+                 "phi3.5-moe-42b-a6.6b": 8}.get(arch, 4)
+        opt = adam(moment_dtype=jnp.bfloat16)
+        step = make_train_step(cfg, opt, accum=accum,
+                               accum_dtype=jnp.bfloat16)
+        state_sh = type(specs["state"])(
+            params=shd.param_shardings(specs["state"].params, cfg, mesh,
+                                       strategy),
+            opt=type(specs["state"].opt)(
+                step=shd.replicated(mesh),
+                mu=shd.param_shardings(specs["state"].opt.mu, cfg, mesh,
+                                       strategy),
+                nu=shd.param_shardings(specs["state"].opt.nu, cfg, mesh,
+                                       strategy)),
+            step=shd.replicated(mesh))
+        tok_sh = shd.token_sharding(sh["global_batch"], mesh, cfg, strategy)
+        args = [specs["state"], specs["tokens"]]
+        in_shardings = [state_sh, tok_sh]
+        if "aux_embeds" in specs:
+            args.append(specs["aux_embeds"])
+            in_shardings.append(shd.token_sharding(
+                sh["global_batch"], mesh, cfg, strategy))
+        fn = jax.jit(step,
+                     in_shardings=tuple(in_shardings),
+                     out_shardings=(state_sh, shd.replicated(mesh)))
+
+    elif sh["kind"] == "prefill":
+        p_sh = shd.param_shardings(specs["params"], cfg, mesh, strategy)
+        tok_sh = shd.token_sharding(sh["global_batch"], mesh, cfg, strategy)
+        args = [specs["params"], specs["tokens"]]
+        in_shardings = [p_sh, tok_sh]
+        if "aux_embeds" in specs:
+            args.append(specs["aux_embeds"])
+            in_shardings.append(shd.token_sharding(
+                sh["global_batch"], mesh, cfg, strategy))
+
+        def pf(params, tokens, aux=None):
+            return lm.prefill(params, tokens, cfg, aux)
+        fn = jax.jit(pf, in_shardings=tuple(in_shardings),
+                     out_shardings=shd.replicated(mesh))
+
+    else:  # decode
+        p_sh = shd.param_shardings(specs["params"], cfg, mesh, strategy)
+        c_sh = shd.cache_shardings(specs["cache"], cfg, mesh,
+                                   sh["global_batch"], sh["seq_len"])
+        tok_sh = shd.token_sharding(sh["global_batch"], mesh, cfg, strategy)
+
+        def sv(params, token, cache):
+            return lm.serve_step(params, token, cache, cfg)
+        fn = jax.jit(sv, in_shardings=(p_sh, tok_sh, c_sh),
+                     out_shardings=(shd.replicated(mesh), c_sh))
+        args = [specs["params"], specs["token"], specs["cache"]]
+
+    with mesh:
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    result = {
+        "cell": cell_id, "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "strategy": strategy,
+        "kind": sh["kind"], "seq_len": sh["seq_len"],
+        "global_batch": sh["global_batch"],
+        "vq_attn": cfg.vq_attn,
+        "param_count": cfg.param_count(),
+        "trip_hints": trip_hints(cfg, sh, arch),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+        },
+        "cost": {k: cost.get(k, 0.0) for k in
+                 ("flops", "bytes accessed", "transcendentals")},
+        "collectives": coll,
+        "wall_s": round(time.time() - t_start, 1),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--vq", action="store_true",
+                    help="force VQ-Attention for the cell (perf variants)")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape_name}__{mesh_name}"
+                path = os.path.join(args.out, cell + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {cell}")
+                    continue
+                try:
+                    r = run_cell(arch, shape_name, mp, args.out,
+                                 force_vq=args.vq)
+                    print(f"[ok]   {cell}  flops={r['cost']['flops']:.3e} "
+                          f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB "
+                          f"compile={r['compile_s']}s")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((cell, repr(e)))
+                    print(f"[FAIL] {cell}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for c, e in failures:
+            print(" ", c, e)
+        raise SystemExit(1)
+    print("\nall cells compiled")
+
+
+if __name__ == "__main__":
+    main()

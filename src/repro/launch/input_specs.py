@@ -1,0 +1,80 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) cell.
+
+No device allocation ever happens here: params/optimizer/cache structures
+come from jax.eval_shape over the real init functions, so the dry-run
+lowers the exact same pytrees the runtime uses.  Modality frontends are
+STUBS per the assignment spec: [audio] gets precomputed frame embeddings,
+[vlm] precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import lm
+from repro.train.loop import TrainState, make_train_step
+from repro.train.optimizer import adam
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def arch_for_cell(cfg: ArchConfig, shape_name: str) -> ArchConfig:
+    """Cell-specific config adjustments (DESIGN.md Arch-applicability):
+    long_500k needs sub-quadratic attention -> VQ-Attention is enabled for
+    the attention families; ssm/hybrid run natively."""
+    if shape_name == "long_500k" and cfg.family in (
+            "dense", "moe", "vlm", "audio"):
+        return cfg.with_vq(k=1024, window=512)
+    return cfg
+
+
+def aux_embed_spec(cfg: ArchConfig, batch: int):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "audio":
+        return sds((batch, cfg.enc_seq, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        return sds((batch, cfg.n_patches, cfg.d_model), dt)
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """Abstract inputs for the cell's entry point.
+
+    kind == train   -> {state, tokens(+1 for targets), aux_embeds?}
+    kind == prefill -> {params, tokens, aux_embeds?}
+    kind == decode  -> {params, token, cache}
+    """
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    cfg = arch_for_cell(cfg, shape_name)
+
+    params = jax.eval_shape(
+        lambda: lm.init_lm(jax.random.PRNGKey(0), cfg))
+
+    if sh["kind"] == "train":
+        opt = adam(moment_dtype=jnp.bfloat16)
+        opt_state = jax.eval_shape(lambda p: opt.init(p), params)
+        state = TrainState(params, opt_state, sds((), jnp.int32))
+        out = {"state": state, "tokens": sds((b, s + 1))}
+        aux = aux_embed_spec(cfg, b)
+        if aux is not None:
+            out["aux_embeds"] = aux
+        return out
+
+    if sh["kind"] == "prefill":
+        out = {"params": params, "tokens": sds((b, s))}
+        aux = aux_embed_spec(cfg, b)
+        if aux is not None:
+            out["aux_embeds"] = aux
+        return out
+
+    # decode: one new token against a cache of seq_len
+    cache = jax.eval_shape(
+        lambda: lm.init_serve_cache(cfg, b, s))
+    return {"params": params, "token": sds((b, 1)), "cache": cache}

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state -- the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before the first jax
+device query, and smoke tests must keep seeing 1 device.
+
+Topology (TPU v5e target):
+  single-pod: (16, 16)    = ("data", "model")   -- 256 chips
+  multi-pod:  (2, 16, 16) = ("pod", "data", "model") -- 512 chips, the
+              "pod" axis composes with "data" for DP/FSDP so adding pods
+              widens the FSDP axis (elastic posture: shardings are written
+              against axis NAMES, so any pod count re-binds cleanly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = n_devices or len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axes_size(mesh, axes) -> int:
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s

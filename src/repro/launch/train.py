@@ -1,0 +1,100 @@
+"""Pod training launcher: pjit-sharded train loop on an explicit mesh.
+
+On real hardware this runs under `python -m repro.launch.train --arch <id>`
+per host (jax.distributed initializes from the TPU environment); on the CPU
+host it runs the same code on a small host mesh -- which is exactly what
+tests/test_distributed.py does with forced virtual devices.
+
+Fault tolerance contract (DESIGN.md section 5):
+  * checkpoint every --ckpt-every steps (atomic, versioned);
+  * on start: resume from latest checkpoint if present;
+  * data shards are pure functions of (seed, step) -> a restarted or
+    *re-sized* job replays the identical global batch sequence (elastic
+    re-sharding is just restoring logical arrays under new shardings).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, SMOKES
+from repro.data.tokens import TokenStreamConfig, batch_shard
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train.loop import TrainState, make_train_step
+from repro.train.optimizer import adam, warmup_cosine
+
+
+def build_sharded_step(cfg, mesh, opt, accum: int):
+    strategy = shd.strategy_for(cfg, mesh)
+    step_fn = make_train_step(cfg, opt, accum=accum,
+                              accum_dtype=jnp.bfloat16)
+    params_shape = jax.eval_shape(
+        lambda: lm.init_lm(jax.random.PRNGKey(0), cfg))
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    state_sh = TrainState(
+        params=shd.param_shardings(params_shape, cfg, mesh, strategy),
+        opt=type(opt_shape)(
+            step=shd.replicated(mesh),
+            mu=shd.param_shardings(opt_shape.mu, cfg, mesh, strategy),
+            nu=shd.param_shardings(opt_shape.nu, cfg, mesh, strategy)),
+        step=shd.replicated(mesh))
+    return jax.jit(step_fn, in_shardings=(state_sh, None),
+                   out_shardings=(state_sh, shd.replicated(mesh))), state_sh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = SMOKES[args.arch]() if args.smoke else ARCHS[args.arch]
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+    opt = adam(warmup_cosine(args.lr, 10, args.steps), clip_norm=1.0,
+               moment_dtype=jnp.bfloat16)
+    step, state_sh = build_sharded_step(cfg, mesh, opt, args.accum)
+
+    with mesh:
+        params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
+        state = TrainState(params, opt.init(params),
+                           jnp.zeros((), jnp.int32))
+        start = 0
+        if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+            state, manifest = ckpt.restore(args.ckpt_dir, state)
+            start = manifest["step"]
+            print(f"resumed from step {start}")
+        ds = TokenStreamConfig(vocab=cfg.vocab, seq_len=args.seq + 1,
+                               global_batch=args.batch, seed=args.seed)
+        t0 = time.time()
+        for s in range(start, args.steps):
+            tokens = jnp.asarray(batch_shard(ds, s, 0, 1))
+            state, metrics = step(state, tokens)
+            if (s + 1) % 10 == 0:
+                print(f"step {s+1:5d}  loss {float(metrics['loss']):.4f}  "
+                      f"{(s+1-start)/(time.time()-t0):.2f} it/s")
+            if args.ckpt_dir and (s + 1) % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, s + 1, state, {"seed": args.seed})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

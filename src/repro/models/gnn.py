@@ -1,0 +1,270 @@
+"""Full GNN models: assembly, losses, train steps, VQ mini-batch inference.
+
+Three execution paths over one parameter set:
+  * full-graph  -- the paper's oracle ("Full-Graph" rows of Table 4);
+  * sampler     -- exact message passing on a sampled subgraph (baselines);
+  * VQ          -- the paper's mini-batch algorithm (Alg. 1): approximated
+                   message passing + probe-trick gradient taps + streaming
+                   codebook/assignment refresh after every step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codebook as cbm
+from repro.core.codebook import CodebookConfig
+from repro.core.conv import LayerVQState, MinibatchPack, init_layer_vq_state, \
+    refresh_assignment
+from repro.graph.batching import FullGraphOperands
+from repro.nn.gnn_layers import BACKBONES
+from repro.train.optimizer import Optimizer
+
+Params = Any
+
+
+class GNNConfig(NamedTuple):
+    backbone: str = "gcn"
+    f_in: int = 128
+    hidden: int = 128
+    n_out: int = 40
+    n_layers: int = 3
+    heads: int = 4
+    task: str = "node"            # "node" | "link"
+    multilabel: bool = False
+    grad_inject: bool = True      # Eq. 7 out-of-batch gradient injection
+    # (paper-faithful ON; our experiments find forward-VQ alone already
+    # reaches parity while stale gradient codewords can add noise --
+    # EXPERIMENTS.md "reproduction nuances")
+    codebook: CodebookConfig = CodebookConfig(k=256, f_prod=4)
+
+    def layer_dims(self) -> list[tuple[int, int]]:
+        dims = []
+        f = self.f_in
+        for l in range(self.n_layers):
+            last = l == self.n_layers - 1
+            f_out = (self.n_out if (last and self.task == "node")
+                     else self.hidden)
+            dims.append((f, f_out))
+            f = f_out
+        return dims
+
+    def layer_codebook_cfg(self) -> CodebookConfig:
+        if self.backbone == "transformer":
+            # dense learnable convolution needs full-width codewords
+            return self.codebook._replace(f_prod=1 << 30)
+        return self.codebook
+
+
+def init_gnn(key: jax.Array, cfg: GNNConfig) -> list[Params]:
+    bk = BACKBONES[cfg.backbone]
+    keys = jax.random.split(key, cfg.n_layers)
+    params = []
+    for k, (fi, fo) in zip(keys, cfg.layer_dims()):
+        if cfg.backbone in ("gat", "transformer") and fo % cfg.heads != 0:
+            # widen the output of attention layers to a head multiple; a
+            # final linear head maps to n_out
+            fo = ((fo + cfg.heads - 1) // cfg.heads) * cfg.heads
+        params.append(bk.init(k, fi, fo, heads=cfg.heads))
+    return params
+
+
+def _layer_out_dims(cfg: GNNConfig) -> list[tuple[int, int]]:
+    dims = cfg.layer_dims()
+    if cfg.backbone in ("gat", "transformer"):
+        dims = [(fi, ((fo + cfg.heads - 1) // cfg.heads) * cfg.heads)
+                for fi, fo in dims]
+        fixed = []
+        f = cfg.f_in
+        for _, fo in dims:
+            fixed.append((f, fo))
+            f = fo
+        return fixed
+    return dims
+
+
+def init_vq_states(key: jax.Array, cfg: GNNConfig,
+                   n_nodes: int) -> list[LayerVQState]:
+    bk = BACKBONES[cfg.backbone]
+    cb_cfg = cfg.layer_codebook_cfg()
+    states = []
+    for i, (fi, fo) in enumerate(_layer_out_dims(cfg)):
+        k = jax.random.fold_in(key, i)
+        fg = bk.f_grad(fi, fo, heads=cfg.heads)
+        states.append(init_layer_vq_state(k, n_nodes, fi, fg, cb_cfg))
+    return states
+
+
+def probe_shapes(cfg: GNNConfig, b: int) -> list[tuple[int, ...]]:
+    bk = BACKBONES[cfg.backbone]
+    return [bk.probe_shape(b, fi, fo, heads=cfg.heads)
+            for fi, fo in _layer_out_dims(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _act_for_layer(cfg: GNNConfig, l: int):
+    last = l == cfg.n_layers - 1
+    return (lambda z: z) if last else jax.nn.relu
+
+
+def full_forward(params: list[Params], x: jax.Array,
+                 ops_: FullGraphOperands, cfg: GNNConfig) -> jax.Array:
+    bk = BACKBONES[cfg.backbone]
+    for l, p in enumerate(params):
+        x = bk.full_apply(p, x, ops_, _act_for_layer(cfg, l))
+    return x
+
+
+def vq_forward(params: list[Params], x_b: jax.Array, probes: list[jax.Array],
+               pack: MinibatchPack, vq_states: list[LayerVQState],
+               degrees: jax.Array, cfg: GNNConfig
+               ) -> tuple[jax.Array, list[jax.Array]]:
+    """Returns (output, per-layer input activations) -- the activations pair
+    with the probe cotangents for the codebook update (Alg. 1 line 15)."""
+    bk = BACKBONES[cfg.backbone]
+    cb_cfg = cfg.layer_codebook_cfg()
+    acts = []
+    x = x_b
+    for l, (p, vq, (fi, fo)) in enumerate(
+            zip(params, vq_states, _layer_out_dims(cfg))):
+        acts.append(x)
+        x = bk.vq_apply(p, x, probes[l], pack, vq, degrees, cb_cfg,
+                        _act_for_layer(cfg, l), fi, fo,
+                        inject=cfg.grad_inject)
+    return x, acts
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics
+# ---------------------------------------------------------------------------
+
+def node_loss(logits: jax.Array, labels: jax.Array, multilabel: bool,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE/BCE over (optionally masked) rows.  The mask implements the
+    paper's transductive mini-batching: batches traverse ALL nodes (so every
+    node's codeword assignment stays fresh) but only labeled nodes
+    contribute to the loss."""
+    if multilabel:
+        per = jnp.mean(
+            jnp.maximum(logits, 0) - logits * labels +
+            jnp.log1p(jnp.exp(-jnp.abs(logits))), axis=-1)
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        per = -jnp.take_along_axis(logp, labels[:, None], 1)[:, 0]
+    if mask is None:
+        return jnp.mean(per)
+    return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def node_metric(logits: jax.Array, labels: jax.Array,
+                multilabel: bool) -> jax.Array:
+    if multilabel:   # micro-F1 at threshold 0
+        pred = logits > 0
+        tp = jnp.sum(pred * labels)
+        return 2 * tp / jnp.maximum(jnp.sum(pred) + jnp.sum(labels), 1.0)
+    return jnp.mean(jnp.argmax(logits, -1) == labels)
+
+
+def link_loss(emb: jax.Array, pos: jax.Array, neg: jax.Array,
+              pair_mask: Optional[jax.Array] = None) -> jax.Array:
+    """emb indexed locally: pos/neg [e, 2] into emb rows.  pair_mask allows
+    padding the pair lists to a static size (compile-once semantics)."""
+    def score(pairs):
+        return jnp.sum(emb[pairs[:, 0]] * emb[pairs[:, 1]], axis=-1)
+    sp, sn = score(pos), score(neg)
+    # stable BCE: log(1+e^z) = softplus(z) (log1p(exp(.)) overflows at init)
+    lp, ln = jax.nn.softplus(-sp), jax.nn.softplus(sn)
+    if pair_mask is None:
+        return jnp.mean(lp) + jnp.mean(ln)
+    m = jnp.maximum(pair_mask.sum(), 1.0)
+    return jnp.sum(lp * pair_mask) / m + jnp.sum(ln * pair_mask) / m
+
+
+def hits_at_k(pos_scores: np.ndarray, neg_scores: np.ndarray,
+              k: int = 50) -> float:
+    if len(neg_scores) < k:
+        thresh = neg_scores.min() if len(neg_scores) else -np.inf
+    else:
+        thresh = np.sort(neg_scores)[-k]
+    return float((pos_scores > thresh).mean())
+
+
+# ---------------------------------------------------------------------------
+# VQ train step (Alg. 1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
+def vq_train_step(params, vq_states, opt_state, pack: MinibatchPack,
+                  x_b, labels_b, degrees, cfg: GNNConfig, opt: Optimizer,
+                  loss_mask=None, neg_pairs=None, pos_pairs=None):
+    probes = [jnp.zeros(s, jnp.float32) for s in probe_shapes(cfg, pack.b)]
+
+    def loss_fn(params, probes):
+        out, acts = vq_forward(params, x_b, probes, pack, vq_states,
+                               degrees, cfg)
+        if cfg.task == "node":
+            loss = node_loss(out, labels_b, cfg.multilabel, loss_mask)
+        else:
+            loss = link_loss(out, pos_pairs, neg_pairs)
+        return loss, (acts, out)
+
+    (loss, (acts, out)), (gparams, gprobes) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(params, probes)
+
+    new_params, new_opt = opt.update(gparams, opt_state, params)
+
+    # ---- Alg. 1 line 15-16: VQ update + assignment synchronization ----
+    cb_cfg = cfg.layer_codebook_cfg()
+    new_states = []
+    for l, vq in enumerate(vq_states):
+        feats = acts[l].astype(jnp.float32)
+        grads = gprobes[l].reshape(pack.b, -1).astype(jnp.float32)
+        # scale gradients to O(1) for stable codebook geometry; whitening
+        # makes the codebook invariant to this, it only guards fp range
+        new_cb, assign = cbm.update(vq.codebook, feats, grads, cb_cfg)
+        new_states.append(refresh_assignment(
+            LayerVQState(new_cb, vq.assignment, vq.counts),
+            pack.batch_ids, assign))
+
+    return new_params, new_states, new_opt, loss, out
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def vq_eval_batch(params, vq_states, pack: MinibatchPack, x_b, degrees,
+                  cfg: GNNConfig):
+    probes = [jnp.zeros(s, jnp.float32) for s in probe_shapes(cfg, pack.b)]
+    out, _ = vq_forward(params, x_b, probes, pack, vq_states, degrees, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full-graph / subgraph train steps (oracle + sampling baselines)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
+def full_train_step(params, opt_state, x, ops_: FullGraphOperands,
+                    labels, loss_mask, cfg: GNNConfig, opt: Optimizer,
+                    neg_pairs=None, pos_pairs=None, pair_mask=None):
+    """loss_mask: [n] float weights over nodes (mask-based so padded
+    subgraphs of a bucketed static size reuse one compilation)."""
+    def loss_fn(params):
+        out = full_forward(params, x, ops_, cfg)
+        if cfg.task == "node":
+            return node_loss(out, labels, cfg.multilabel, loss_mask)
+        return link_loss(out, pos_pairs, neg_pairs, pair_mask)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params, new_opt = opt.update(grads, opt_state, params)
+    return new_params, new_opt, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def full_predict(params, x, ops_: FullGraphOperands, cfg: GNNConfig):
+    return full_forward(params, x, ops_, cfg)

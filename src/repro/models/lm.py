@@ -1,0 +1,533 @@
+"""Unified LM backbone covering the six assigned families.
+
+  dense   -- granite-3-8b, llama3-405b, qwen3-32b, llama3.2-3b
+  moe     -- qwen3-moe-30b-a3b, phi3.5-moe-42b
+  ssm     -- xlstm-350m (mLSTM/sLSTM pairs, attention-free)
+  hybrid  -- zamba2-2.7b (Mamba2 stack + one shared attention block)
+  audio   -- whisper-tiny (encoder-decoder; stub frame embeddings)
+  vlm     -- llama-3.2-vision-11b (cross-attention image layers; stub patches)
+
+All layer stacks are `jax.lax.scan` over stacked params (compile-time O(1)
+in depth -- required for the 126-layer dry-run), with optional remat.
+Entry points:
+  init_lm, train_loss, prefill, serve_step, init_serve_cache
+
+Exact attention is the published-architecture baseline; setting
+``cfg.vq_attn`` swaps in VQ-Attention (the paper's technique) behind the
+same interface -- sub-quadratic train/prefill and O(k+W) decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act_constraints import constrain_tokens
+from repro.nn.attention import (AttnParams, KVCache, decode_attend, gqa_attend,
+                                init_attn, init_kv_cache, qkv)
+from repro.nn.ffn import (MLPParams, MoEParams, apply_mlp, apply_moe,
+                          init_mlp, init_moe)
+from repro.nn.layers import dense_init, embed_init, rmsnorm, rope
+from repro.nn.ssm import (Mamba2Params, Mamba2State, apply_mamba2_step,
+                          apply_mamba2_train, init_mamba2, init_mamba2_state)
+from repro.nn.vq_attention import (VQAttnConfig, VQKVCache, init_vq_cache,
+                                   vq_attention_decode, vq_attention_train)
+from repro.nn.xlstm import (MLSTMParams, MLSTMState, SLSTMParams, SLSTMState,
+                            apply_mlstm_step, apply_mlstm_train,
+                            apply_slstm_step, apply_slstm_train, init_mlstm,
+                            init_mlstm_state, init_slstm, init_slstm_state)
+
+Params = Any
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _vq_cfg(cfg: ArchConfig) -> VQAttnConfig:
+    return VQAttnConfig(k=cfg.vq_k, window=cfg.vq_window)
+
+
+# ===========================================================================
+# block init (per family)
+# ===========================================================================
+
+def _init_dense_block(key, cfg: ArchConfig) -> dict:
+    ka, km = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {"ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "attn": init_attn(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, dt),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dt)}
+
+
+def _init_moe_block(key, cfg: ArchConfig) -> dict:
+    ka, km = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {"ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "attn": init_attn(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, dt),
+            "moe": init_moe(km, cfg.d_model, cfg.n_experts, cfg.d_ff, dt)}
+
+
+def _init_cross_block(key, cfg: ArchConfig) -> dict:
+    ka, km = jax.random.split(key)
+    dt = _dtype(cfg)
+    return {"ln1": jnp.ones((cfg.d_model,), dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "attn": init_attn(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.hd, dt),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, dt),
+            "gate": jnp.zeros((), dt)}
+
+
+def init_lm(key: jax.Array, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    ke, kb, kh, kx = jax.random.split(key, 4)
+    params: dict = {
+        "embed": embed_init(ke, cfg.vocab, cfg.d_model, dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+        "head": dense_init(kh, cfg.d_model, cfg.vocab, dt),
+    }
+    if cfg.family in ("dense", "vlm"):
+        init_b = _init_dense_block
+    elif cfg.family == "moe":
+        init_b = _init_moe_block
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        params["blocks"] = jax.vmap(lambda k: init_b(k, cfg))(
+            jax.random.split(kb, cfg.n_layers))
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_period
+        params["cross_blocks"] = jax.vmap(
+            lambda k: _init_cross_block(k, cfg))(
+                jax.random.split(kx, n_cross))
+    if cfg.family == "audio":
+        params["enc_blocks"] = jax.vmap(lambda k: _init_dense_block(k, cfg))(
+            jax.random.split(kb, cfg.enc_layers))
+        def dec_block(k):
+            k1, k2 = jax.random.split(k)
+            blk = _init_dense_block(k1, cfg)
+            blk["ln_x"] = jnp.ones((cfg.d_model,), dt)
+            blk["cross"] = init_attn(k2, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd, dt)
+            return blk
+        params["blocks"] = jax.vmap(dec_block)(
+            jax.random.split(kx, cfg.n_layers))
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.family == "ssm":
+        def pair(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln1": jnp.ones((cfg.d_model,), dt),
+                    "ln2": jnp.ones((cfg.d_model,), dt),
+                    "mlstm": init_mlstm(k1, cfg.d_model, cfg.n_heads, dt),
+                    "slstm": init_slstm(k2, cfg.d_model, dt)}
+        params["pairs"] = jax.vmap(pair)(
+            jax.random.split(kb, cfg.n_layers // 2))
+    if cfg.family == "hybrid":
+        def mblock(k):
+            return {"ln": jnp.ones((cfg.d_model,), dt),
+                    "mamba": init_mamba2(k, cfg.d_model, cfg.ssm_state, dt)}
+        groups = cfg.n_layers // cfg.attn_period
+        params["mamba"] = jax.vmap(jax.vmap(mblock))(
+            jax.random.split(kb, cfg.n_layers
+                             ).reshape(groups, cfg.attn_period, 2))
+        params["shared"] = _init_dense_block(kx, cfg)
+    return params
+
+
+# ===========================================================================
+# attention sub-blocks (train / decode)
+# ===========================================================================
+
+def _attn_train(bp, x, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    x = constrain_tokens(x)
+    h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = qkv(bp["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                  positions, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta)
+    if cfg.vq_attn:
+        o = vq_attention_train(q, k, v, _vq_cfg(cfg))
+    else:
+        o = gqa_attend(q, k, v, causal=True)
+    return constrain_tokens(x + o.reshape(b, s, -1) @ bp["attn"].wo)
+
+
+def _attn_decode(bp, x, cache, cfg: ArchConfig):
+    b = x.shape[0]
+    h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    positions = jnp.full((b, 1), cache.pos, jnp.int32)
+    q, k, v = qkv(bp["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                  positions, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta)
+    if cfg.vq_attn:
+        o, cache = vq_attention_decode(q, k, v, cache, _vq_cfg(cfg))
+    else:
+        o, cache = decode_attend(q, cache, k, v)
+    return x + o.reshape(b, 1, -1) @ bp["attn"].wo, cache
+
+
+def _ffn(bp, x, cfg: ArchConfig):
+    b, s, d = x.shape
+    h = rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe" or "moe" in bp:
+        y, aux = apply_moe(bp["moe"], h.reshape(b * s, d), cfg.top_k)
+        return constrain_tokens(x + y.reshape(b, s, d)), aux
+    return constrain_tokens(x + apply_mlp(bp["mlp"], h)), jnp.zeros(())
+
+
+def _cross_attn(bp, x, ctx_k, ctx_v, cfg: ArchConfig, gated: bool = False):
+    """Cross-attention to precomputed context K/V.  x: [B, S, d]."""
+    b, s, _ = x.shape
+    h = rmsnorm(x, bp["ln_x" if "ln_x" in bp else "ln1"], cfg.norm_eps)
+    attn = bp["cross" if "cross" in bp else "attn"]
+    q = (h @ attn.wq).reshape(b, s, cfg.n_heads, cfg.hd)
+    o = gqa_attend(q, ctx_k, ctx_v, causal=False)
+    o = o.reshape(b, s, -1) @ attn.wo
+    if gated:
+        o = jnp.tanh(bp["gate"]) * o
+    return x + o
+
+
+def _ctx_kv(attn: AttnParams, ctx: jax.Array, cfg: ArchConfig):
+    b, f, _ = ctx.shape
+    k = (ctx @ attn.wk).reshape(b, f, cfg.n_kv_heads, cfg.hd)
+    v = (ctx @ attn.wv).reshape(b, f, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+# ===========================================================================
+# training forward (per family), scan over stacked blocks
+# ===========================================================================
+
+def _scan_blocks(x, blocks, body, cfg: ArchConfig):
+    fn = jax.checkpoint(body) if cfg.remat else body
+    return jax.lax.scan(fn, x, blocks)
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array,
+                 vocab: int) -> jax.Array:
+    """Vocab-parallel embedding lookup.
+
+    A plain gather from a vocab-sharded table makes GSPMD replicate the
+    whole table ("involuntary full rematerialization" -- Perf iteration 4);
+    the one-hot matmul form keeps the vocab axis sharded and reduces with
+    one psum.  Processed in sequence chunks so the one-hot never exceeds
+    [B, 512, vocab_shard].
+    """
+    if vocab < 8192:
+        return embed[tokens]
+    b, s = tokens.shape
+    chunk = 512
+    if s % chunk != 0:
+        return jnp.einsum('bsv,vd->bsd',
+                          jax.nn.one_hot(tokens, vocab, dtype=embed.dtype),
+                          embed)
+    tok_c = jnp.moveaxis(tokens.reshape(b, s // chunk, chunk), 1, 0)
+
+    def body(_, tc):
+        oh = jax.nn.one_hot(tc, vocab, dtype=embed.dtype)
+        return None, jnp.einsum('bcv,vd->bcd', oh, embed)
+    _, xs = jax.lax.scan(body, None, tok_c)
+    return jnp.moveaxis(xs, 0, 1).reshape(b, s, embed.shape[1])
+
+
+def forward_train(params: Params, tokens: jax.Array, cfg: ArchConfig,
+                  aux_embeds: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S, vocab], moe aux loss)."""
+    b, s = tokens.shape
+    x = constrain_tokens(embed_lookup(params["embed"], tokens, cfg.vocab))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    moe_aux = jnp.zeros(())
+
+    if cfg.family in ("dense", "moe"):
+        def body(xc, bp):
+            xc = _attn_train(bp, xc, cfg, positions)
+            xc, aux = _ffn(bp, xc, cfg)
+            return xc, aux
+        gsz = cfg.remat_group
+        if cfg.remat and gsz > 1 and cfg.n_layers % gsz == 0:
+            # sqrt-remat: checkpoint at group granularity (saves G=L/gsz
+            # carries instead of L; recompute peaks at one group)
+            groups = cfg.n_layers // gsz
+            stacked = jax.tree_util.tree_map(
+                lambda a: a.reshape(groups, gsz, *a.shape[1:]),
+                params["blocks"])
+
+            def group_body(xc, gblocks):
+                # nested remat: per-layer checkpoint INSIDE the group
+                # checkpoint, so the group recompute never holds more than
+                # one layer's residuals (fwd runs 3x; peak activations
+                # G*carry + gsz*carry + 1 layer -- Perf iteration 3b)
+                xc, auxs = jax.lax.scan(jax.checkpoint(body), xc, gblocks)
+                return xc, jnp.sum(auxs)
+            x, auxs = jax.lax.scan(jax.checkpoint(group_body), x, stacked)
+        else:
+            x, auxs = _scan_blocks(x, params["blocks"], body, cfg)
+        moe_aux = jnp.sum(auxs)
+
+    elif cfg.family == "vlm":
+        ctx = aux_embeds  # [B, P, d] stub patch embeddings
+        period = cfg.cross_attn_period
+        groups = cfg.n_layers // period
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape(groups, period, *a.shape[1:]),
+            params["blocks"])
+
+        def group_body(xc, gb):
+            text_blocks, cross_bp = gb
+            def tbody(xc2, bp):
+                xc2 = _attn_train(bp, xc2, cfg, positions)
+                xc2, _ = _ffn(bp, xc2, cfg)
+                return xc2, jnp.zeros(())
+            xc, _ = jax.lax.scan(tbody, xc, text_blocks)
+            ck, cv = _ctx_kv(cross_bp["attn"], ctx, cfg)
+            xc = _cross_attn(cross_bp, xc, ck, cv, cfg, gated=True)
+            xc, _ = _ffn(cross_bp, xc, cfg)
+            return xc, jnp.zeros(())
+        gfn = jax.checkpoint(group_body) if cfg.remat else group_body
+        x, _ = jax.lax.scan(gfn, x, (stacked, params["cross_blocks"]))
+
+    elif cfg.family == "audio":
+        enc = aux_embeds  # [B, F, d] stub frame embeddings
+        fpos = jnp.broadcast_to(jnp.arange(enc.shape[1])[None],
+                                enc.shape[:2])
+
+        def ebody(ec, bp):
+            h = rmsnorm(ec, bp["ln1"], cfg.norm_eps)
+            q, k, v = qkv(bp["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.hd, fpos, rope_theta=cfg.rope_theta)
+            ec = ec + gqa_attend(q, k, v, causal=False
+                                 ).reshape(*ec.shape[:2], -1) @ bp["attn"].wo
+            ec, _ = _ffn(bp, ec, cfg)
+            return ec, jnp.zeros(())
+        enc, _ = _scan_blocks(enc, params["enc_blocks"], ebody, cfg)
+        enc = rmsnorm(enc, params["enc_ln_f"], cfg.norm_eps)
+
+        def dbody(xc, bp):
+            xc = _attn_train(bp, xc, cfg, positions)
+            ck, cv = _ctx_kv(bp["cross"], enc, cfg)
+            xc = _cross_attn(bp, xc, ck, cv, cfg)
+            xc, _ = _ffn(bp, xc, cfg)
+            return xc, jnp.zeros(())
+        x, _ = _scan_blocks(x, params["blocks"], dbody, cfg)
+
+    elif cfg.family == "ssm":
+        def body(xc, bp):
+            xc = xc + apply_mlstm_train(
+                bp["mlstm"], rmsnorm(xc, bp["ln1"], cfg.norm_eps),
+                cfg.n_heads)
+            xc = xc + apply_slstm_train(
+                bp["slstm"], rmsnorm(xc, bp["ln2"], cfg.norm_eps))
+            return xc, jnp.zeros(())
+        x, _ = _scan_blocks(x, params["pairs"], body, cfg)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def group_body(xc, mblocks):
+            def mbody(xc2, bp):
+                xc2 = xc2 + apply_mamba2_train(
+                    bp["mamba"], rmsnorm(xc2, bp["ln"], cfg.norm_eps),
+                    cfg.d_model, cfg.ssm_state)
+                return xc2, jnp.zeros(())
+            xc, _ = jax.lax.scan(mbody, xc, mblocks)
+            xc = _attn_train(shared, xc, cfg, positions)
+            xc, _ = _ffn(shared, xc, cfg)
+            return xc, jnp.zeros(())
+        gfn = jax.checkpoint(group_body) if cfg.remat else group_body
+        x, _ = jax.lax.scan(gfn, x, params["mamba"])
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return x, moe_aux
+
+
+def train_loss(params: Params, tokens: jax.Array, cfg: ArchConfig,
+               aux_embeds: jax.Array | None = None) -> jax.Array:
+    """Next-token cross entropy (mean over tokens) + MoE aux.
+
+    CE is computed matmul-style (one-hot einsum for the target logit +
+    streaming logsumexp) so the vocab axis stays model-sharded end to end
+    -- a take_along_axis gather on a sharded vocab forces an all-gather of
+    the full [tokens, vocab] logits under GSPMD (perf log, EXPERIMENTS.md
+    section Perf iteration 1).
+    """
+    hidden, moe_aux = forward_train(params, tokens[:, :-1], cfg, aux_embeds)
+    targets = tokens[:, 1:]
+    logits = (hidden @ params["head"]).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, cfg.vocab, dtype=logits.dtype)
+    target_logit = jnp.einsum('bsv,bsv->bs', logits, onehot)
+    nll = lse - target_logit
+    return jnp.mean(nll) + 0.01 * moe_aux
+
+
+# ===========================================================================
+# serving: cache init, prefill, one-token decode
+# ===========================================================================
+
+def init_serve_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Any:
+    """Decode-state pytree for one-token serve steps.
+
+    Exact attention: per-layer KV caches of length seq_len.
+    VQ-Attention:    per-layer codebook + W-token ring (O(k+W) state --
+                     the paper's inference memory win).
+    SSM/hybrid:      constant-size recurrent states.
+    """
+    dt = _dtype(cfg)
+    def kv_stack(n):
+        return jax.vmap(lambda _: init_kv_cache(
+            batch, seq_len, cfg.n_kv_heads, cfg.hd, dt))(jnp.arange(n))
+
+    def vq_stack(n):
+        return jax.vmap(lambda _: init_vq_cache(
+            batch, cfg.n_kv_heads, cfg.hd, _vq_cfg(cfg), dt))(jnp.arange(n))
+
+    if cfg.family in ("dense", "moe"):
+        return {"kv": vq_stack(cfg.n_layers) if cfg.vq_attn
+                else kv_stack(cfg.n_layers)}
+    if cfg.family == "vlm":
+        n_cross = cfg.n_layers // cfg.cross_attn_period
+        return {"kv": vq_stack(cfg.n_layers) if cfg.vq_attn
+                else kv_stack(cfg.n_layers),
+                "cross_k": jnp.zeros((n_cross, batch, cfg.n_patches,
+                                      cfg.n_kv_heads, cfg.hd), dt),
+                "cross_v": jnp.zeros((n_cross, batch, cfg.n_patches,
+                                      cfg.n_kv_heads, cfg.hd), dt)}
+    if cfg.family == "audio":
+        return {"kv": vq_stack(cfg.n_layers) if cfg.vq_attn
+                else kv_stack(cfg.n_layers),
+                "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                      cfg.n_kv_heads, cfg.hd), dt),
+                "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                      cfg.n_kv_heads, cfg.hd), dt)}
+    if cfg.family == "ssm":
+        n_pairs = cfg.n_layers // 2
+        return {"mlstm": jax.vmap(lambda _: init_mlstm_state(
+                    batch, cfg.d_model, cfg.n_heads))(jnp.arange(n_pairs)),
+                "slstm": jax.vmap(lambda _: init_slstm_state(
+                    batch, cfg.d_model))(jnp.arange(n_pairs))}
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_period
+        mstates = jax.vmap(jax.vmap(lambda _: init_mamba2_state(
+            batch, cfg.d_model, cfg.ssm_state, _dtype(cfg))))(
+                jnp.zeros((groups, cfg.attn_period)))
+        attn_c = (jax.vmap(lambda _: init_vq_cache(
+                      batch, cfg.n_kv_heads, cfg.hd, _vq_cfg(cfg), dt))
+                  (jnp.arange(groups)) if cfg.vq_attn else
+                  jax.vmap(lambda _: init_kv_cache(
+                      batch, seq_len, cfg.n_kv_heads, cfg.hd, dt))
+                  (jnp.arange(groups)))
+        return {"mamba": mstates, "attn": attn_c}
+    raise ValueError(cfg.family)
+
+
+def serve_step(params: Params, token: jax.Array, cache: Any,
+               cfg: ArchConfig) -> tuple[jax.Array, Any]:
+    """One decode step.  token: [B, 1] int32 -> (logits [B, vocab], cache)."""
+    b = token.shape[0]
+    x = params["embed"][token]                           # [B, 1, d]
+
+    if cfg.family in ("dense", "moe"):
+        def body(xc, scan_in):
+            bp, kvc = scan_in
+            xc, kvc = _attn_decode(bp, xc, kvc, cfg)
+            xc, _ = _ffn(bp, xc, cfg)
+            return xc, kvc
+        x, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+        cache = {"kv": new_kv}
+
+    elif cfg.family == "vlm":
+        period = cfg.cross_attn_period
+        groups = cfg.n_layers // period
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape(groups, period, *a.shape[1:]),
+            params["blocks"])
+        kv_g = jax.tree_util.tree_map(
+            lambda a: a.reshape(groups, period, *a.shape[1:]), cache["kv"])
+
+        def gbody(xc, scan_in):
+            tb, cb, kvc, ck, cv = scan_in
+            def tbody(x2, si):
+                bp, kv1 = si
+                x2, kv1 = _attn_decode(bp, x2, kv1, cfg)
+                x2, _ = _ffn(bp, x2, cfg)
+                return x2, kv1
+            xc, kvc = jax.lax.scan(tbody, xc, (tb, kvc))
+            xc = _cross_attn(cb, xc, ck, cv, cfg, gated=True)
+            xc, _ = _ffn(cb, xc, cfg)
+            return xc, kvc
+        x, new_kv = jax.lax.scan(
+            gbody, x, (stacked, params["cross_blocks"], kv_g,
+                       cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, kv=jax.tree_util.tree_map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_kv))
+
+    elif cfg.family == "audio":
+        def body(xc, scan_in):
+            bp, kvc, ck, cv = scan_in
+            xc, kvc = _attn_decode(bp, xc, kvc, cfg)
+            xc = _cross_attn(bp, xc, ck, cv, cfg)
+            xc, _ = _ffn(bp, xc, cfg)
+            return xc, kvc
+        x, new_kv = jax.lax.scan(
+            body, x, (params["blocks"], cache["kv"],
+                      cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, kv=new_kv)
+
+    elif cfg.family == "ssm":
+        def body(xc, scan_in):
+            bp, ms, ss = scan_in
+            o, ms = apply_mlstm_step(
+                bp["mlstm"], rmsnorm(xc, bp["ln1"], cfg.norm_eps),
+                ms, cfg.n_heads)
+            xc = xc + o
+            o, ss = apply_slstm_step(
+                bp["slstm"], rmsnorm(xc, bp["ln2"], cfg.norm_eps), ss)
+            return xc + o, (ms, ss)
+        x, (new_m, new_s) = jax.lax.scan(
+            body, x, (params["pairs"], cache["mlstm"], cache["slstm"]))
+        cache = {"mlstm": new_m, "slstm": new_s}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def gbody(xc, scan_in):
+            mblocks, mstates, kvc = scan_in
+            def mbody(x2, si):
+                bp, st = si
+                o, st = apply_mamba2_step(
+                    bp["mamba"], rmsnorm(x2, bp["ln"], cfg.norm_eps), st,
+                    cfg.d_model, cfg.ssm_state)
+                return x2 + o, st
+            xc, mstates = jax.lax.scan(mbody, xc, (mblocks, mstates))
+            xc, kvc = _attn_decode(shared, xc, kvc, cfg)
+            xc, _ = _ffn(shared, xc, cfg)
+            return xc, (mstates, kvc)
+        x, (new_m, new_kv) = jax.lax.scan(
+            gbody, x, (params["mamba"], cache["mamba"], cache["attn"]))
+        cache = {"mamba": new_m, "attn": new_kv}
+
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return (x[:, 0] @ params["head"]), cache
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            aux_embeds: jax.Array | None = None) -> jax.Array:
+    """Prefill forward: last-position logits [B, vocab].
+
+    The head is applied to the last position ONLY -- materializing
+    [B, S, vocab] logits during prefill cost 384 GiB/device on the 32k
+    cells (perf log, EXPERIMENTS.md section Perf iteration 1).
+
+    (Cache materialization for the subsequent decode uses the same
+    forward's K/V -- the dry-run lowers this function for prefill shapes;
+    decode shapes take pre-existing caches via serve_step.)
+    """
+    hidden, _ = forward_train(params, tokens, cfg, aux_embeds)
+    return hidden[:, -1] @ params["head"]

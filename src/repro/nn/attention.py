@@ -1,0 +1,142 @@
+"""GQA attention for the LM backbones: training, prefill, cached decode.
+
+Layout conventions (TPU-friendly: batch/seq leading, heads x head_dim last):
+  activations  [B, S, d_model]
+  q            [B, S, Hq, dh]
+  k, v         [B, S, Hkv, dh]      (GQA: Hq = G * Hkv)
+  KV cache     [B, S_max, Hkv, dh]  (ring-indexed by absolute position)
+
+The exact-attention path is the published architectures' faithful baseline;
+VQ-Attention (repro/nn/vq_attention.py) is the paper's technique swapped in
+behind the same interface.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense_init, rmsnorm, rope
+
+
+class AttnParams(NamedTuple):
+    wq: jax.Array          # [d, Hq*dh]
+    wk: jax.Array          # [d, Hkv*dh]
+    wv: jax.Array          # [d, Hkv*dh]
+    wo: jax.Array          # [Hq*dh, d]
+    q_norm: jax.Array      # [dh] (qk_norm archs; ones otherwise)
+    k_norm: jax.Array      # [dh]
+
+
+def init_attn(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype=jnp.float32) -> AttnParams:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return AttnParams(
+        wq=dense_init(kq, d, n_heads * head_dim, dtype),
+        wk=dense_init(kk, d, n_kv * head_dim, dtype),
+        wv=dense_init(kv, d, n_kv * head_dim, dtype),
+        wo=dense_init(ko, n_heads * head_dim, d, dtype),
+        q_norm=jnp.ones((head_dim,), dtype),
+        k_norm=jnp.ones((head_dim,), dtype))
+
+
+def qkv(p: AttnParams, x: jax.Array, n_heads: int, n_kv: int, head_dim: int,
+        positions: jax.Array, *, qk_norm: bool = False,
+        rope_theta: float = 500000.0, use_rope: bool = True):
+    b, s, _ = x.shape
+    q = (x @ p.wq).reshape(b, s, n_heads, head_dim)
+    k = (x @ p.wk).reshape(b, s, n_kv, head_dim)
+    v = (x @ p.wv).reshape(b, s, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(q, p.q_norm)
+        k = rmsnorm(k, p.k_norm)
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    return q, k, v
+
+
+_Q_CHUNK = 1024
+
+
+def _gqa_attend_block(q, k, v, causal, kv_mask, q_offset, skv_full):
+    """One query block of GQA attention.  q: [B, sq, Hq, dh]."""
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum('bqhgd,bkhd->bhgqk', qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(dh)
+    if causal:
+        qi = q_offset + jnp.arange(sq)[:, None]   # absolute query positions
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where((ki <= qi)[None, None, None], s, -jnp.inf)
+    if kv_mask is not None:
+        s = jnp.where(kv_mask[:, None, None, None, :] > 0, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum('bhgqk,bkhd->bqhgd', p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+               causal: bool = True,
+               kv_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Grouped-query attention.
+
+    q: [B, Sq, Hq, dh], k/v: [B, Skv, Hkv, dh] -> [B, Sq, Hq, dh].
+    kv_mask: [B, Skv] validity (decode with ragged cache).
+
+    Long sequences are processed in query chunks (a lax.scan) so the
+    [sq, skv] score block never exceeds [_Q_CHUNK, skv] -- the XLA-level
+    equivalent of the Pallas flash kernel's VMEM tiling (the kernel is the
+    TPU execution path; this is the lowerable stand-in with the same
+    activation footprint scaling).
+    """
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    if sq <= _Q_CHUNK or sq % _Q_CHUNK != 0:
+        qoff = (skv - sq) if causal else 0
+        return _gqa_attend_block(q, k, v, causal, kv_mask, qoff, skv)
+
+    nchunk = sq // _Q_CHUNK
+    qc = q.reshape(b, nchunk, _Q_CHUNK, hq, dh)
+
+    # checkpoint each chunk: the [bq, skv] scores are recomputed in the
+    # backward pass instead of being stacked across the scan as residuals
+    # (8 GiB/layer of f32 scores otherwise -- Perf iteration 5c)
+    @jax.checkpoint
+    def body(_, xs):
+        qi, off = xs
+        o = _gqa_attend_block(qi, k, v, causal, kv_mask, off, skv)
+        return None, o
+
+    offs = (skv - sq) + jnp.arange(nchunk) * _Q_CHUNK
+    _, oc = jax.lax.scan(body, None, (jnp.moveaxis(qc, 1, 0), offs))
+    return jnp.moveaxis(oc, 0, 1).reshape(b, sq, hq, dh)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array         # [B, S_max, Hkv, dh]
+    v: jax.Array         # [B, S_max, Hkv, dh]
+    pos: jax.Array       # [] int32 -- number of tokens already cached
+
+
+def init_kv_cache(b: int, s_max: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(jnp.zeros((b, s_max, n_kv, head_dim), dtype),
+                   jnp.zeros((b, s_max, n_kv, head_dim), dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def decode_attend(q: jax.Array, cache: KVCache, k_new: jax.Array,
+                  v_new: jax.Array) -> tuple[jax.Array, KVCache]:
+    """One-token cached decode.  q/k_new/v_new: [B, 1, H*, dh]."""
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), cache.pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), cache.pos, axis=1)
+    valid = (jnp.arange(kc.shape[1]) <= cache.pos).astype(jnp.float32)
+    mask = jnp.broadcast_to(valid[None, :], kc.shape[:2])
+    out = gqa_attend(q, kc, vc, causal=False, kv_mask=mask)
+    return out, KVCache(kc, vc, cache.pos + 1)

@@ -1,0 +1,106 @@
+"""Feed-forward layers: SwiGLU MLP and top-k routed Mixture-of-Experts.
+
+MoE dispatch is the capacity-gather formulation (DESIGN.md section 5):
+  1. router -> top-k experts per token (+ softmax combine weights);
+  2. each expert gathers its top-C tokens (C = tokens*k/E * capacity_factor)
+     -- a plain gather, shardable with experts over the `model` axis (EP);
+  3. batched per-expert matmuls  [E, C, d] x [E, d, ff];
+  4. scatter-add combine weighted by router probs (+ psum over `model`).
+No all-to-alls are emitted on a single device; under EP the gather/scatter
+lower to the expected collectives.  Aux load-balance loss included.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense_init, swiglu
+
+
+class MLPParams(NamedTuple):
+    w1: jax.Array   # [d, ff]
+    w3: jax.Array   # [d, ff]   (gate)
+    w2: jax.Array   # [ff, d]
+
+
+def init_mlp(key, d: int, ff: int, dtype=jnp.float32) -> MLPParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return MLPParams(dense_init(k1, d, ff, dtype),
+                     dense_init(k3, d, ff, dtype),
+                     dense_init(k2, ff, d, dtype))
+
+
+def apply_mlp(p: MLPParams, x: jax.Array) -> jax.Array:
+    return swiglu(x, p.w1, p.w3, p.w2)
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array   # [d, E]
+    w1: jax.Array       # [E, d, eff]
+    w3: jax.Array       # [E, d, eff]
+    w2: jax.Array       # [E, eff, d]
+
+
+def init_moe(key, d: int, n_experts: int, expert_ff: int,
+             dtype=jnp.float32) -> MoEParams:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    return MoEParams(
+        router=dense_init(kr, d, n_experts, jnp.float32),
+        w1=(scale * jax.random.normal(k1, (n_experts, d, expert_ff))
+            ).astype(dtype),
+        w3=(scale * jax.random.normal(k3, (n_experts, d, expert_ff))
+            ).astype(dtype),
+        w2=((1.0 / jnp.sqrt(expert_ff)) *
+            jax.random.normal(k2, (n_experts, expert_ff, d))).astype(dtype))
+
+
+def apply_moe(p: MoEParams, x: jax.Array, top_k: int,
+              capacity_factor: float = 1.25
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: [T, d] (flattened tokens) -> (y [T, d], aux_loss []).
+
+    Capacity-gather dispatch: expert e processes the C highest-prob tokens
+    that routed to it (overflow tokens lose that expert -- standard
+    capacity-drop semantics, recorded in the aux metrics).
+    """
+    t, d = x.shape
+    e = p.router.shape[1]
+    cap = min(t, max(1, int(t * top_k * capacity_factor / e)))
+
+    logits = x.astype(jnp.float32) @ p.router            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)           # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(me * ce) / top_k
+
+    # per-expert top-C token selection: score[token, expert] = routed prob
+    routed = jnp.zeros((t, e), jnp.float32)
+    routed = jnp.take_along_axis(
+        routed, top_e, axis=1)  # placeholder to keep shapes obvious
+    score = jnp.zeros((t, e), jnp.float32)
+    score = score.at[jnp.arange(t)[:, None], top_e].add(top_p)
+
+    gval, gidx = jax.lax.top_k(score.T, cap)             # [E, C]
+    # gather tokens per expert: [E, C, d]
+    xe = x[gidx]
+    h = jnp.einsum('ecd,edf->ecf', xe.astype(jnp.float32),
+                   p.w1.astype(jnp.float32))
+    gate = jnp.einsum('ecd,edf->ecf', xe.astype(jnp.float32),
+                      p.w3.astype(jnp.float32))
+    h = jax.nn.silu(h) * gate
+    ye = jnp.einsum('ecf,efd->ecd', h, p.w2.astype(jnp.float32))
+    ye = ye * (gval > 0)[..., None]                      # mask empty slots
+
+    # scatter-add combine, weighted by the (renormalized) router probs
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[gidx.reshape(-1)].add(
+        (ye * gval[..., None]).reshape(-1, d))
+    return y.astype(x.dtype), aux

@@ -1,0 +1,44 @@
+"""Shared NN primitives for the LM stack (no external NN library)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, f_in: int, f_out: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (f_in, f_out), jnp.float32)
+            / jnp.sqrt(f_in)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (0.02 * jax.random.normal(key, (vocab, d), jnp.float32)
+            ).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array,
+         theta: float = 500000.0) -> jax.Array:
+    """Rotary embedding.  x: [..., S, H, dh], positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                            # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
+           w2: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (silu(x w1) * (x w3)) w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2

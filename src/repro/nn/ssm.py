@@ -1,0 +1,156 @@
+"""Mamba2 (SSD) block -- the state-space substrate for zamba2.
+
+Scalar-decay state space (Mamba2's SSD form): per head h with state size N,
+
+    H_t = a_t * H_{t-1} + dt_t * B_t (x) x_t        H in R^{N x P}
+    y_t = C_t . H_t + D * x_t
+
+a_t = exp(-dt_t * A_h) with per-head A > 0, dt via softplus.  Training uses
+``jax.lax.associative_scan`` over the time axis (the recurrence is linear
+with scalar per-head decay -> a classic first-order scan), which is both
+exact and O(log S) depth -- the TPU-idiomatic replacement for the CUDA
+chunked kernel (DESIGN.md hardware adaptation).  Decode carries (H, conv
+state) explicitly: O(1) per step, no KV growth -- why the ``long_500k``
+cell is native for SSM archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense_init
+
+
+class Mamba2Params(NamedTuple):
+    in_proj: jax.Array    # [d, 2*di + 2*N + H]   (x, z, B, C, dt)
+    conv_w: jax.Array     # [4, di + 2*N]         depthwise conv over time
+    a_log: jax.Array      # [H]
+    d_skip: jax.Array     # [H]
+    dt_bias: jax.Array    # [H]
+    norm_scale: jax.Array # [di]
+    out_proj: jax.Array   # [di, d]
+
+
+class Mamba2State(NamedTuple):
+    h: jax.Array          # [B, H, N, P]    SSM state
+    conv: jax.Array       # [B, 3, di+2N]   last taps of the causal conv
+
+
+def dims(d_model: int, ssm_state: int, expand: int = 2,
+         head_p: int = 64) -> tuple[int, int, int]:
+    di = expand * d_model
+    n_heads = di // head_p
+    return di, n_heads, ssm_state
+
+
+def init_mamba2(key, d_model: int, ssm_state: int,
+                dtype=jnp.float32) -> Mamba2Params:
+    di, h, n = dims(d_model, ssm_state)
+    k1, k2, k3 = jax.random.split(key, 3)
+    conv_ch = di + 2 * n
+    return Mamba2Params(
+        in_proj=dense_init(k1, d_model, 2 * di + 2 * n + h, dtype),
+        conv_w=(0.5 * jax.random.normal(k2, (4, conv_ch), jnp.float32)
+                ).astype(dtype),
+        a_log=jnp.zeros((h,), jnp.float32),
+        d_skip=jnp.ones((h,), jnp.float32),
+        dt_bias=jnp.full((h,), -2.0, jnp.float32),
+        norm_scale=jnp.ones((di,), dtype),
+        out_proj=dense_init(k3, di, d_model, dtype))
+
+
+def _split(p: Mamba2Params, proj: jax.Array, di: int, n: int, h: int):
+    x = proj[..., :di]
+    z = proj[..., di:2 * di]
+    bmat = proj[..., 2 * di:2 * di + n]
+    cmat = proj[..., 2 * di + n:2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n:]
+    return x, z, bmat, cmat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, kernel 4.  x: [B, S, C], w: [4, C]."""
+    pad = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1]] * w[i][None, None]
+               for i in range(4))
+
+
+def apply_mamba2_train(p: Mamba2Params, xin: jax.Array, d_model: int,
+                       ssm_state: int) -> jax.Array:
+    """xin: [B, S, d] -> [B, S, d] via associative scan over time."""
+    di, h, n = dims(d_model, ssm_state)
+    pdim = di // h
+    b, s, _ = xin.shape
+    proj = xin @ p.in_proj
+    x, z, bmat, cmat, dt = _split(p, proj, di, n, h)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p.conv_w))
+    x, bmat, cmat = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)     # [B,S,H]
+    a = jnp.exp(-dt * jnp.exp(p.a_log))                          # [B,S,H]
+    xh = x.reshape(b, s, h, pdim).astype(jnp.float32)
+    # state increment  dB_t = dt * B_t (x) x_t : [B,S,H,N,P]
+    inc = jnp.einsum('bsh,bsn,bshp->bshnp', dt,
+                     bmat.astype(jnp.float32), xh)
+
+    def combine(e1, e2):
+        a1, u1 = e1
+        a2, u2 = e2
+        return a1 * a2, a2[..., None, None] * u1 + u2
+
+    a_seq = jnp.moveaxis(a, 1, 0)                                # [S,B,H]
+    u_seq = jnp.moveaxis(inc, 1, 0)                              # [S,B,H,N,P]
+    _, hstates = jax.lax.associative_scan(combine, (a_seq, u_seq))
+    hstates = jnp.moveaxis(hstates, 0, 1)                        # [B,S,H,N,P]
+
+    y = jnp.einsum('bsn,bshnp->bshp', cmat.astype(jnp.float32), hstates)
+    y = y + p.d_skip[None, None, :, None] * xh
+    y = y.reshape(b, s, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    # grouped RMSNorm (per Mamba2)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, -1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + 1e-5) *
+         p.norm_scale.astype(jnp.float32)).astype(xin.dtype)
+    return y @ p.out_proj
+
+
+def init_mamba2_state(b: int, d_model: int, ssm_state: int,
+                      dtype=jnp.float32) -> Mamba2State:
+    di, h, n = dims(d_model, ssm_state)
+    return Mamba2State(
+        h=jnp.zeros((b, h, n, di // h), jnp.float32),
+        conv=jnp.zeros((b, 3, di + 2 * n), dtype))
+
+
+def apply_mamba2_step(p: Mamba2Params, xin: jax.Array, state: Mamba2State,
+                      d_model: int, ssm_state: int
+                      ) -> tuple[jax.Array, Mamba2State]:
+    """One decode step.  xin: [B, 1, d]."""
+    di, h, n = dims(d_model, ssm_state)
+    pdim = di // h
+    b = xin.shape[0]
+    proj = xin[:, 0] @ p.in_proj
+    x, z, bmat, cmat, dt = _split(p, proj, di, n, h)
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)              # [B, C]
+    taps = jnp.concatenate([state.conv, xbc[:, None]], axis=1)   # [B, 4, C]
+    xbc = jax.nn.silu(jnp.einsum('btc,tc->bc', taps, p.conv_w))
+    new_conv = taps[:, 1:]
+    x, bmat, cmat = xbc[:, :di], xbc[:, di:di + n], xbc[:, di + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)     # [B,H]
+    a = jnp.exp(-dt * jnp.exp(p.a_log))
+    xh = x.reshape(b, h, pdim).astype(jnp.float32)
+    hnew = a[..., None, None] * state.h + jnp.einsum(
+        'bh,bn,bhp->bhnp', dt, bmat.astype(jnp.float32), xh)
+    y = jnp.einsum('bn,bhnp->bhp', cmat.astype(jnp.float32), hnew)
+    y = y + p.d_skip[None, :, None] * xh
+    y = y.reshape(b, di).astype(xin.dtype) * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, -1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + 1e-5) *
+         p.norm_scale.astype(jnp.float32)).astype(xin.dtype)
+    return (y @ p.out_proj)[:, None], Mamba2State(hnew, new_conv)

@@ -1,0 +1,232 @@
+"""VQ-Attention: the paper's approximated message passing on the token graph.
+
+A causal attention layer is a dense learnable graph convolution (paper
+Table 5); VQ-GNN's Eq. 6 replaces messages from far-away context with
+messages from k codewords.  Transposed to the sequence axis:
+
+  * the "mini-batch" is the current block of W tokens (exact attention
+    within the block and to the previous block -- the C_in term);
+  * all older tokens are represented by k codewords of their (key, value)
+    pairs with cluster masses (the C~_out X~ term); attention to a cluster
+    of mass m scores  q.k~ + log m  (App. E row-normalization, exact);
+  * the codebook is built *streamingly* as the sequence is consumed
+    (online k-means on keys, value centroids ride along), the in-sequence
+    analogue of the paper's EMA codebook.
+
+Backward: unlike the GNN setting, the full sequence is resident during LM
+training, so the centroid construction (linear sums) stays inside autodiff
+(assignments stop-gradient, straight-through) -- gradients DO flow to past
+tokens' k/v through the codewords.  This replaces the Eq. 7 injection with
+an exact VJP of the same approximation; DESIGN.md section 4 records this
+adaptation.
+
+Cost: O(S * (2W + k) * d) instead of O(S^2 * d) -- sub-quadratic training
+and O(k + W) per decode step, which is what unlocks the ``long_500k`` cells
+for dense architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class VQAttnConfig(NamedTuple):
+    k: int = 1024          # codewords per (batch, kv-head)
+    window: int = 512      # exact-attention block/window width
+
+
+class VQKVCache(NamedTuple):
+    """Decode-time state: codebook summaries + exact ring window.
+
+    Shapes (per layer):
+      sum_k/sum_v: [B, Hkv, k, dh]   running cluster sums
+      count:       [B, Hkv, k]       cluster masses
+      win_k/win_v: [B, W, Hkv, dh]   ring buffer of the last W tokens
+      pos:         []                absolute position
+    """
+    sum_k: jax.Array
+    sum_v: jax.Array
+    count: jax.Array
+    win_k: jax.Array
+    win_v: jax.Array
+    pos: jax.Array
+
+
+def init_vq_cache(b: int, n_kv: int, head_dim: int, cfg: VQAttnConfig,
+                  dtype=jnp.bfloat16) -> VQKVCache:
+    return VQKVCache(
+        sum_k=jnp.zeros((b, n_kv, cfg.k, head_dim), jnp.float32),
+        sum_v=jnp.zeros((b, n_kv, cfg.k, head_dim), jnp.float32),
+        count=jnp.zeros((b, n_kv, cfg.k), jnp.float32),
+        win_k=jnp.zeros((b, cfg.window, n_kv, head_dim), dtype),
+        win_v=jnp.zeros((b, cfg.window, n_kv, head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def _centroids(sum_k, sum_v, count):
+    denom = jnp.maximum(count, 1e-6)[..., None]
+    return sum_k / denom, sum_v / denom
+
+
+def _assign(keys: jax.Array, cent_k: jax.Array, count: jax.Array
+            ) -> jax.Array:
+    """Nearest centroid (masked to live clusters).  keys: [..., m, dh],
+    cent_k: [..., k, dh], count: [..., k] -> [..., m] int32."""
+    d = -2.0 * jnp.einsum('...md,...kd->...mk', keys.astype(jnp.float32),
+                          cent_k.astype(jnp.float32)) \
+        + jnp.sum(cent_k.astype(jnp.float32) ** 2, -1)[..., None, :]
+    d = jnp.where(count[..., None, :] > 0, d, 0.5 * jnp.finfo(jnp.float32).max)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# training: block-scan with a streaming codebook
+# ---------------------------------------------------------------------------
+
+def vq_attention_train(q: jax.Array, k: jax.Array, v: jax.Array,
+                       cfg: VQAttnConfig) -> jax.Array:
+    """Causal VQ-Attention over a full training sequence.
+
+    q: [B, S, Hq, dh], k/v: [B, S, Hkv, dh] -> [B, S, Hq, dh].
+    S must be a multiple of cfg.window.
+    """
+    b, s, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    w = min(cfg.window, s)
+    nblk = s // w
+    assert s % w == 0, (s, w)
+    kcb = cfg.k
+    scale = 1.0 / jnp.sqrt(dh)
+
+    # [nblk, B, Hkv, w, dh] block-major layout for the scan
+    kb = k.transpose(0, 2, 1, 3).reshape(b, hkv, nblk, w, dh
+                                         ).transpose(2, 0, 1, 3, 4)
+    vb = v.transpose(0, 2, 1, 3).reshape(b, hkv, nblk, w, dh
+                                         ).transpose(2, 0, 1, 3, 4)
+    qb = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, nblk, w, dh
+                                         ).transpose(3, 0, 1, 2, 4, 5)
+
+    causal = jnp.tril(jnp.ones((w, w), jnp.float32))
+
+    def step(carry, blk):
+        sum_k, sum_v, count, prev_k, prev_v, has_prev = carry
+        qi, ki, vi = blk                       # [B,Hkv,(g,)w,dh]
+        cent_k, cent_v = _centroids(sum_k, sum_v, count)
+        q32 = qi.astype(jnp.float32) * scale
+
+        # codeword context (C~_out X~): mass-weighted softmax contribution
+        s_cb = jnp.einsum('bhgqd,bhkd->bhgqk', q32, cent_k) \
+            + jnp.log(jnp.maximum(count, 1e-9))[:, :, None, None, :]
+        s_cb = jnp.where(count[:, :, None, None, :] > 0, s_cb, -jnp.inf)
+        # previous block (exact sliding window)
+        s_pr = jnp.einsum('bhgqd,bhkd->bhgqk', q32,
+                          prev_k.astype(jnp.float32))
+        s_pr = jnp.where(has_prev > 0, s_pr, -jnp.inf)
+        # current block, causal (C_in)
+        s_in = jnp.einsum('bhgqd,bhkd->bhgqk', q32, ki.astype(jnp.float32))
+        s_in = jnp.where(causal[None, None, None] > 0, s_in, -jnp.inf)
+
+        s_all = jnp.concatenate([s_cb, s_pr, s_in], axis=-1)
+        att = jax.nn.softmax(s_all, axis=-1)
+        o = jnp.einsum('bhgqk,bhkd->bhgqd', att[..., :kcb], cent_v) \
+            + jnp.einsum('bhgqk,bhkd->bhgqd', att[..., kcb:kcb + w],
+                         prev_v.astype(jnp.float32)) \
+            + jnp.einsum('bhgqk,bhkd->bhgqd', att[..., kcb + w:],
+                         vi.astype(jnp.float32))
+
+        # ---- streaming codebook update: fold the OUTGOING block (the one
+        # leaving the exact window) into the clusters.  Assignments are
+        # stop-gradient; the sums stay differentiable (straight-through). --
+        def fold(args):
+            sk, sv, ct = args
+            # seed empty clusters round-robin from the incoming keys
+            seed_slot = (jnp.argmin(ct, axis=-1)[..., None]
+                         + jnp.arange(w)[None, None]) % kcb
+            any_live = (ct.max(-1, keepdims=True) > 0)
+            assign = jnp.where(
+                any_live,
+                jax.lax.stop_gradient(
+                    _assign(prev_k.astype(jnp.float32), *_centroids(
+                        sk, sv, ct)[:1], ct)),
+                seed_slot.astype(jnp.int32))
+            onehot = jax.nn.one_hot(assign, kcb, dtype=jnp.float32)
+            pm = jnp.where(has_prev > 0, 1.0, 0.0)
+            sk = sk + pm * jnp.einsum('bhwk,bhwd->bhkd', onehot,
+                                      prev_k.astype(jnp.float32))
+            sv = sv + pm * jnp.einsum('bhwk,bhwd->bhkd', onehot,
+                                      prev_v.astype(jnp.float32))
+            ct = ct + pm * jnp.sum(onehot, axis=2)
+            return sk, sv, ct
+
+        sum_k, sum_v, count = fold((sum_k, sum_v, count))
+        return (sum_k, sum_v, count, ki, vi, jnp.ones(())), o
+
+    init = (jnp.zeros((b, hkv, kcb, dh), jnp.float32),
+            jnp.zeros((b, hkv, kcb, dh), jnp.float32),
+            jnp.zeros((b, hkv, kcb), jnp.float32),
+            jnp.zeros((b, hkv, w, dh), q.dtype),
+            jnp.zeros((b, hkv, w, dh), q.dtype),
+            jnp.zeros(()))
+    _, outs = jax.lax.scan(step, init, (qb, kb, vb))
+    # outs: [nblk, B, Hkv, g, w, dh] -> [B, S, Hq, dh]
+    o = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv * g, s, dh)
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode: O(k + W) per step via the fused Pallas kernel
+# ---------------------------------------------------------------------------
+
+def vq_attention_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                        cache: VQKVCache, cfg: VQAttnConfig
+                        ) -> tuple[jax.Array, VQKVCache]:
+    """One decode step.  q: [B, 1, Hq, dh], k/v_new: [B, 1, Hkv, dh]."""
+    b, _, hq, dh = q.shape
+    hkv = k_new.shape[2]
+    g = hq // hkv
+    w = cache.win_k.shape[1]
+
+    # fold the token that falls out of the window into the codebook
+    slot = cache.pos % w
+    old_k = jax.lax.dynamic_slice_in_dim(cache.win_k, slot, 1, axis=1)
+    old_v = jax.lax.dynamic_slice_in_dim(cache.win_v, slot, 1, axis=1)
+    evict = (cache.pos >= w).astype(jnp.float32)
+    cent_k, _ = _centroids(cache.sum_k, cache.sum_v, cache.count)
+    okh = old_k.transpose(0, 2, 1, 3).astype(jnp.float32)   # [B,Hkv,1,dh]
+    ovh = old_v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    assign = _assign(okh, cent_k, jnp.maximum(cache.count, 1e-9))
+    # seed empty codebook: first k evictions each claim their own slot
+    seeded = jnp.where(cache.count.max() > 0, assign,
+                       (cache.pos % cfg.k)[None, None, None])
+    onehot = jax.nn.one_hot(seeded[..., 0], cfg.k, dtype=jnp.float32)
+    sum_k = cache.sum_k + evict * onehot[..., None] * okh
+    sum_v = cache.sum_v + evict * onehot[..., None] * ovh
+    count = cache.count + evict * onehot
+
+    # write the new token into the ring window
+    win_k = jax.lax.dynamic_update_slice_in_dim(
+        cache.win_k, k_new.astype(cache.win_k.dtype), slot, axis=1)
+    win_v = jax.lax.dynamic_update_slice_in_dim(
+        cache.win_v, v_new.astype(cache.win_v.dtype), slot, axis=1)
+    # a ring slot is valid iff it has ever been written
+    win_mask = (jnp.arange(w) <= cache.pos).astype(jnp.float32)
+
+    cent_k, cent_v = _centroids(sum_k, sum_v, count)
+    qh = q[:, 0].reshape(b, hkv, g, dh)                # group-major queries
+    n = b * hkv
+    out = kops.vq_attention_decode(
+        qh.reshape(n, g, dh),
+        cent_k.reshape(n, cfg.k, dh).astype(q.dtype),
+        cent_v.reshape(n, cfg.k, dh).astype(q.dtype),
+        count.reshape(n, cfg.k),
+        win_k.transpose(0, 2, 1, 3).reshape(n, w, dh),
+        win_v.transpose(0, 2, 1, 3).reshape(n, w, dh),
+        jnp.broadcast_to(win_mask[None], (b, w)).repeat(hkv, 0).reshape(n, w))
+    out = out.reshape(b, hkv, g, dh).reshape(b, 1, hq, dh)
+    return out.astype(q.dtype), VQKVCache(sum_k, sum_v, count, win_k, win_v,
+                                          cache.pos + 1)

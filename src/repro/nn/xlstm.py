@@ -1,0 +1,221 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM: per head, a matrix memory C in R^{dk x dv} with exponential gating,
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t^T q_t / max(|n_t^T q_t|, 1)
+
+with log-space gate stabilization (m_t).  Training uses the *parallel*
+(attention-like) form the xLSTM paper derives -- a decay-masked quadratic
+attention; decode uses the O(1) recurrence.  Attention-free: the matrix
+memory is itself a fixed-size context summary, which is why VQ-GNN's
+codebook technique is inapplicable here (DESIGN.md Arch-applicability) --
+the arch already has a constant-size context.
+
+sLSTM: scalar-memory LSTM with exponential gating; the recurrence is
+nonlinear in h_{t-1} so training runs a lax.scan over time (the paper's own
+parallelization limit).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMParams(NamedTuple):
+    wq: jax.Array        # [d, H*dk]
+    wk: jax.Array        # [d, H*dk]
+    wv: jax.Array        # [d, H*dv]
+    w_if: jax.Array      # [d, 2*H]   input/forget gate pre-activations
+    wo: jax.Array        # [H*dv, d]
+    ogate: jax.Array     # [d, H*dv]
+
+
+def init_mlstm(key, d: int, n_heads: int, dtype=jnp.float32) -> MLSTMParams:
+    dk = dv = d // n_heads
+    ks = jax.random.split(key, 6)
+    return MLSTMParams(
+        wq=dense_init(ks[0], d, n_heads * dk, dtype),
+        wk=dense_init(ks[1], d, n_heads * dk, dtype),
+        wv=dense_init(ks[2], d, n_heads * dv, dtype),
+        w_if=dense_init(ks[3], d, 2 * n_heads, dtype),
+        wo=dense_init(ks[4], d, d, dtype),
+        ogate=dense_init(ks[5], d, d, dtype))
+
+
+def apply_mlstm_train(p: MLSTMParams, x: jax.Array,
+                      n_heads: int) -> jax.Array:
+    """Parallel (decay-masked quadratic) form.  x: [B, S, d]."""
+    b, s, d = x.shape
+    dk = d // n_heads
+    q = (x @ p.wq).reshape(b, s, n_heads, dk) / jnp.sqrt(dk)
+    k = (x @ p.wk).reshape(b, s, n_heads, dk)
+    v = (x @ p.wv).reshape(b, s, n_heads, dk)
+    gates = (x @ p.w_if).reshape(b, s, n_heads, 2).astype(jnp.float32)
+    logi = -jax.nn.softplus(-gates[..., 0])  # log i_t (sigmoid input gate)
+    logf = -jax.nn.softplus(-gates[..., 1])  # log f_t
+
+    # cumulative log-forget F_t = sum_{u<=t} log f_u ;
+    # score(t, u) = F_t - F_u + log i_u  (u <= t), stabilized per row.
+    # Processed in query chunks (lax.scan) so the [T, U] decay matrix never
+    # exceeds [chunk, S] -- the 32k prefill cells materialized the full
+    # [S, S, H] tensor otherwise (EXPERIMENTS.md Perf iteration 1).
+    fcum = jnp.cumsum(logf, axis=1)                          # [B,S,H]
+    chunk = min(1024, s)
+    q32 = q.astype(jnp.float32)
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    def do_chunk(_, xs):
+        qc, fc, off = xs          # [B,c,H,dk], [B,c,H], []
+        scores = fc[:, :, None, :] - fcum[:, None, :, :] \
+            + logi[:, None, :, :]                            # [B,c,S,H]
+        tidx = off + jnp.arange(qc.shape[1])
+        causal = (tidx[None, :, None] >= jnp.arange(s)[None, None, :]
+                  )[..., None]
+        scores = jnp.where(causal, scores, -jnp.inf)
+        m = jnp.max(scores, axis=2, keepdims=True)
+        dmat = jnp.exp(scores - m)
+        sim = jnp.einsum('bthd,buhd->btuh', qc, k32)
+        w = sim * dmat
+        norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)),
+                           jnp.exp(-m[:, :, 0]))
+        hc = jnp.einsum('btuh,buhd->bthd', w, v32) / norm[..., None]
+        return None, hc
+
+    if s % chunk == 0 and s > chunk:
+        nc = s // chunk
+        qcs = jnp.moveaxis(q32.reshape(b, nc, chunk, n_heads, dk), 1, 0)
+        fcs = jnp.moveaxis(fcum.reshape(b, nc, chunk, n_heads), 1, 0)
+        offs = jnp.arange(nc) * chunk
+        _, hcs = jax.lax.scan(do_chunk, None, (qcs, fcs, offs))
+        h = jnp.moveaxis(hcs, 0, 1).reshape(b, s, d)
+    else:
+        _, h = do_chunk(None, (q32, fcum, jnp.zeros((), jnp.int32)))
+        h = h.reshape(b, s, d)
+    h = h.astype(x.dtype)
+    return (h * jax.nn.sigmoid(x @ p.ogate)) @ p.wo
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array        # [B, H, dk, dv]
+    n: jax.Array        # [B, H, dk]
+    m: jax.Array        # [B, H]     log-space stabilizer
+
+
+def init_mlstm_state(b: int, d: int, n_heads: int) -> MLSTMState:
+    dk = d // n_heads
+    return MLSTMState(jnp.zeros((b, n_heads, dk, dk), jnp.float32),
+                      jnp.zeros((b, n_heads, dk), jnp.float32),
+                      jnp.full((b, n_heads), -1e30, jnp.float32))
+
+
+def apply_mlstm_step(p: MLSTMParams, x: jax.Array, state: MLSTMState,
+                     n_heads: int) -> tuple[jax.Array, MLSTMState]:
+    """x: [B, 1, d] -> ([B, 1, d], new state).  O(1) per step."""
+    b, _, d = x.shape
+    dk = d // n_heads
+    xt = x[:, 0]
+    q = (xt @ p.wq).reshape(b, n_heads, dk).astype(jnp.float32) / jnp.sqrt(dk)
+    k = (xt @ p.wk).reshape(b, n_heads, dk).astype(jnp.float32)
+    v = (xt @ p.wv).reshape(b, n_heads, dk).astype(jnp.float32)
+    gates = (xt @ p.w_if).reshape(b, n_heads, 2).astype(jnp.float32)
+    logi = -jax.nn.softplus(-gates[..., 0])
+    logf = -jax.nn.softplus(-gates[..., 1])
+
+    m_new = jnp.maximum(state.m + logf, logi)
+    fs = jnp.exp(state.m + logf - m_new)
+    is_ = jnp.exp(logi - m_new)
+    c = fs[..., None, None] * state.c + is_[..., None, None] * \
+        jnp.einsum('bhk,bhv->bhkv', k, v)
+    n = fs[..., None] * state.n + is_[..., None] * k
+    num = jnp.einsum('bhk,bhkv->bhv', q, c)
+    # stabilized-space normalizer floor is exp(-m), NOT 1 (the unstabilized
+    # floor 1 maps to exp(-m) after the m_t rescaling -- matches the
+    # parallel form exactly; xLSTM stabilization appendix)
+    den = jnp.maximum(jnp.abs(jnp.einsum('bhk,bhk->bh', q, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, d).astype(x.dtype)
+    out = (h * jax.nn.sigmoid(xt @ p.ogate)) @ p.wo
+    return out[:, None], MLSTMState(c, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMParams(NamedTuple):
+    w_x: jax.Array      # [d, 4*d]   (i, f, z, o) input projections
+    w_h: jax.Array      # [d, 4*d]   recurrent projections
+    b: jax.Array        # [4*d]
+    wo: jax.Array       # [d, d]
+
+
+def init_slstm(key, d: int, dtype=jnp.float32) -> SLSTMParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return SLSTMParams(
+        w_x=dense_init(k1, d, 4 * d, dtype),
+        w_h=(0.3 * jax.random.normal(k2, (d, 4 * d), jnp.float32) /
+             jnp.sqrt(d)).astype(dtype),
+        b=jnp.zeros((4 * d,), dtype),
+        wo=dense_init(k3, d, d, dtype))
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array        # [B, d]
+    c: jax.Array        # [B, d]
+    n: jax.Array        # [B, d]
+    m: jax.Array        # [B, d]
+
+
+def init_slstm_state(b: int, d: int) -> SLSTMState:
+    return SLSTMState(jnp.zeros((b, d), jnp.float32),
+                      jnp.zeros((b, d), jnp.float32),
+                      jnp.ones((b, d), jnp.float32),
+                      jnp.full((b, d), -1e30, jnp.float32))
+
+
+def _slstm_cell(p: SLSTMParams, xt: jax.Array,
+                st: SLSTMState) -> tuple[jax.Array, SLSTMState]:
+    pre = (xt @ p.w_x + st.h.astype(xt.dtype) @ p.w_h + p.b
+           ).astype(jnp.float32)
+    d = xt.shape[-1]
+    zi, zf, zz, zo = jnp.split(pre, 4, axis=-1)
+    logi = zi                      # exponential input gate (log space)
+    logf = -jax.nn.softplus(-zf)   # sigmoid forget gate (log space)
+    m_new = jnp.maximum(st.m + logf, logi)
+    i = jnp.exp(logi - m_new)
+    f = jnp.exp(st.m + logf - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c = f * st.c + i * z
+    n = jnp.maximum(f * st.n + i, 1e-6)
+    h = o * (c / n)
+    return h.astype(xt.dtype), SLSTMState(h, c, n, m_new)
+
+
+def apply_slstm_train(p: SLSTMParams, x: jax.Array) -> jax.Array:
+    """x: [B, S, d] -- sequential lax.scan (nonlinear recurrence)."""
+    b, s, d = x.shape
+    st0 = init_slstm_state(b, d)
+
+    def step(st, xt):
+        h, st2 = _slstm_cell(p, xt, st)
+        return st2, h
+
+    _, hs = jax.lax.scan(step, st0, jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(hs, 0, 1) @ p.wo
+
+
+def apply_slstm_step(p: SLSTMParams, x: jax.Array, st: SLSTMState
+                     ) -> tuple[jax.Array, SLSTMState]:
+    h, st2 = _slstm_cell(p, x[:, 0], st)
+    return (h @ p.wo)[:, None], st2

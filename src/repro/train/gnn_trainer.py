@@ -1,0 +1,301 @@
+"""GNN experiment harness: the paper's four training regimes on one API.
+
+  train_full     -- "Full-Graph" oracle rows of Table 4
+  train_vq       -- VQ-GNN (Alg. 1), mini-batched, streaming codebooks
+  train_sampler  -- NS-SAGE / Cluster-GCN / GraphSAINT-RW baselines
+  vq_inference   -- mini-batched codeword inference (the paper's 4x
+                    inference speedup claim; supports the inductive setting
+                    via feature-half assignment)
+
+Each returns a result dict with metric history, wall-times, and the
+memory/message accounting used by benchmarks (Table 2/3 analogues).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codebook as cbm
+from repro.core.codebook import CodebookConfig
+from repro.graph.batching import (full_operands, make_pack, minibatch_stream,
+                                  subgraph_operands)
+from repro.graph.sampling import (cluster_gcn_batches, graphsaint_rw_batches,
+                                  ns_sage_batches, partition_graph)
+from repro.graph.structure import Graph
+from repro.models.gnn import (GNNConfig, full_forward, full_predict,
+                              full_train_step, hits_at_k, init_gnn,
+                              init_vq_states, link_loss, node_loss,
+                              node_metric, probe_shapes, vq_eval_batch,
+                              vq_forward, vq_train_step)
+from repro.train.optimizer import adam, rmsprop
+
+
+def _eval_full(params, g, cfg, x, ops):
+    out = full_predict(params, x, ops, cfg)
+    labels = jnp.asarray(g.labels)
+    return {
+        "val": float(node_metric(out[g.val_idx], labels[g.val_idx],
+                                 cfg.multilabel)),
+        "test": float(node_metric(out[g.test_idx], labels[g.test_idx],
+                                  cfg.multilabel)),
+    }
+
+
+def _eval_link(params, g, cfg, x, ops):
+    emb = np.asarray(full_predict(params, x, ops, cfg))
+
+    def scores(pairs):
+        return (emb[pairs[:, 0]] * emb[pairs[:, 1]]).sum(-1)
+    return {
+        "val": hits_at_k(scores(g.val_edges), scores(g.val_neg_edges)),
+        "test": hits_at_k(scores(g.test_edges), scores(g.test_neg_edges)),
+    }
+
+
+def _evaluate(params, g, cfg, x, ops):
+    return (_eval_link if cfg.task == "link" else _eval_full)(
+        params, g, cfg, x, ops)
+
+
+# ---------------------------------------------------------------------------
+# memory accounting (paper Table 3: bytes materialized per mini-batch)
+# ---------------------------------------------------------------------------
+
+def vq_batch_bytes(b: int, deg: int, f: int, L: int, k: int,
+                   f_prod: int = 4) -> int:
+    """VQ-GNN per-batch device bytes: batch features/acts + packed neighbor
+    lists + codebooks + reconstructed context messages."""
+    n_branches = max(1, f // f_prod)
+    pack = b * deg * 4 * 6                     # ids/mask/pos x2 directions
+    acts = L * b * f * 4
+    books = L * n_branches * k * 2 * f_prod * 4
+    recon = b * deg * f * 4                    # reconstructed neighbors
+    return pack + acts + books + recon
+
+
+def subgraph_batch_bytes(n_sub: int, m_sub: int, f: int, L: int) -> int:
+    """Sampler per-batch bytes: subgraph features+acts+edges."""
+    return n_sub * f * 4 * L + m_sub * 2 * 8
+
+
+def messages_per_batch_vq(g: Graph, b: int) -> float:
+    """Paper Sec. 4: VQ preserves ALL messages to the batch: b*d of them."""
+    return b * float(g.m) / g.n
+
+
+# ---------------------------------------------------------------------------
+# trainers
+# ---------------------------------------------------------------------------
+
+def train_full(g: Graph, cfg: GNNConfig, *, epochs: int, lr: float = 1e-2,
+               seed: int = 0, eval_every: int = 10) -> dict:
+    ops = full_operands(g)
+    x = jnp.asarray(g.features)
+    labels = jnp.asarray(g.labels)
+    params = init_gnn(jax.random.PRNGKey(seed), cfg)
+    opt = adam(lr)
+    ost = opt.init(params)
+    hist, t0 = [], time.time()
+    rng = np.random.default_rng(seed)
+    mask_np = np.zeros(g.n, np.float32)
+    mask_np[g.train_idx] = 1.0
+    mask = jnp.asarray(mask_np)
+    for ep in range(epochs):
+        if cfg.task == "link":
+            e = g.train_edges
+            neg = np.stack([rng.integers(0, g.n, len(e)),
+                            rng.integers(0, g.n, len(e))], 1)
+            params, ost, loss = full_train_step(
+                params, ost, x, ops, labels, mask, cfg,
+                opt, neg_pairs=jnp.asarray(neg), pos_pairs=jnp.asarray(e))
+        else:
+            params, ost, loss = full_train_step(
+                params, ost, x, ops, labels, mask, cfg, opt)
+        if (ep + 1) % eval_every == 0 or ep == epochs - 1:
+            m = _evaluate(params, g, cfg, x, ops)
+            hist.append({"epoch": ep + 1, "time": time.time() - t0, **m})
+    return {"history": hist, "final": hist[-1], "params": params,
+            "mem_bytes": g.n * g.f * 4 * cfg.n_layers + g.m * 16}
+
+
+def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
+             lr: float = 3e-3, seed: int = 0, eval_every: int = 10,
+             deg_cap: Optional[int] = None) -> dict:
+    ops = full_operands(g)
+    x = jnp.asarray(g.features)
+    labels = jnp.asarray(g.labels)
+    params = init_gnn(jax.random.PRNGKey(seed), cfg)
+    vq = init_vq_states(jax.random.PRNGKey(seed + 1), cfg, g.n)
+    opt = rmsprop(lr)   # paper App. F: RMSprop for VQ-GNN
+    ost = opt.init(params)
+    rng = np.random.default_rng(seed)
+    train_mask = np.zeros(g.n, np.float32)
+    train_mask[g.train_idx] = 1.0
+    inv_edge = {tuple(e): i for i, e in enumerate(
+        g.train_edges.tolist())} if cfg.task == "link" else None
+
+    hist, t0 = [], time.time()
+    for ep in range(epochs):
+        for pack in minibatch_stream(g, batch_size, rng, deg_cap=deg_cap):
+            bidx = np.asarray(pack.batch_ids)
+            kwargs = {}
+            if cfg.task == "link":
+                # intra-batch positive pairs + random negatives
+                inb = np.full(g.n, -1)
+                inb[bidx] = np.arange(len(bidx))
+                e = g.train_edges
+                sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
+                pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
+                if len(pos) < 2:
+                    pos = np.zeros((2, 2), np.int64)
+                neg = rng.integers(0, len(bidx), pos.shape)
+                kwargs = {"pos_pairs": jnp.asarray(pos),
+                          "neg_pairs": jnp.asarray(neg)}
+            else:
+                kwargs = {"loss_mask": jnp.asarray(train_mask[bidx])}
+            params, vq, ost, loss, _ = vq_train_step(
+                params, vq, ost, pack, x[bidx], labels[bidx], ops.degrees,
+                cfg, opt, **kwargs)
+        if (ep + 1) % eval_every == 0 or ep == epochs - 1:
+            m = _evaluate(params, g, cfg, x, ops)
+            hist.append({"epoch": ep + 1, "time": time.time() - t0, **m})
+    deg = deg_cap or g.max_degree()
+    return {"history": hist, "final": hist[-1], "params": params,
+            "vq_states": vq,
+            "mem_bytes": vq_batch_bytes(batch_size, deg, cfg.hidden,
+                                        cfg.n_layers, cfg.codebook.k),
+            "messages": messages_per_batch_vq(g, batch_size)}
+
+
+def train_sampler(g: Graph, cfg: GNNConfig, method: str, *, epochs: int,
+                  batch_size: int, lr: float = 1e-3, seed: int = 0,
+                  eval_every: int = 10, fanout: int = 5,
+                  walk_length: int = 3, n_parts: int = 32) -> dict:
+    """method in {ns-sage, cluster-gcn, graphsaint-rw}."""
+    ops = full_operands(g)
+    x = jnp.asarray(g.features)
+    labels_np = g.labels
+    params = init_gnn(jax.random.PRNGKey(seed), cfg)
+    opt = adam(lr)
+    ost = opt.init(params)
+    rng = np.random.default_rng(seed)
+    part = partition_graph(g, n_parts, rng) if method == "cluster-gcn" \
+        else None
+    deg_cap = g.max_degree()
+    hist, t0 = [], time.time()
+    max_sub, max_msg = 0, 0
+
+    def _bucket(n):
+        """Round subgraph size up to a bucket so one compile is reused
+        (varying sampled-subgraph shapes otherwise recompile every batch
+        and eventually exhaust the XLA CPU JIT)."""
+        b = 256
+        while b < n:
+            b *= 2
+        return min(b, 1 << 22)
+    max_pairs = 4096
+
+    for ep in range(epochs):
+        if method == "ns-sage":
+            it = ns_sage_batches(g, batch_size, [fanout] * cfg.n_layers,
+                                 rng, g.train_idx)
+        elif method == "cluster-gcn":
+            it = cluster_gcn_batches(g, part, max(1, n_parts // 8), rng)
+        elif method == "graphsaint-rw":
+            it = graphsaint_rw_batches(g, batch_size, walk_length, rng,
+                                       g.train_idx)
+        else:
+            raise ValueError(method)
+        for src, dst, nodes, seed_pos in it:
+            n_real = len(nodes)
+            n_pad = _bucket(n_real)
+            sub_ops = subgraph_operands(src, dst, n_pad, deg_cap)
+            xs = jnp.zeros((n_pad, g.f), jnp.float32
+                           ).at[:n_real].set(x[nodes])
+            lpad = np.zeros((n_pad,) + labels_np.shape[1:],
+                            labels_np.dtype)
+            lpad[:n_real] = labels_np[nodes]
+            ls = jnp.asarray(lpad)
+            mask = np.zeros(n_pad, np.float32)
+            mask[seed_pos] = 1.0
+            if cfg.task == "link":
+                inb = np.full(g.n, -1)
+                inb[nodes] = np.arange(n_real)
+                e = g.train_edges
+                sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
+                pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
+                if len(pos) < 2:
+                    continue
+                pos = pos[:max_pairs]
+                pmask = np.zeros(max_pairs, np.float32)
+                pmask[:len(pos)] = 1.0
+                pos = np.concatenate(
+                    [pos, np.zeros((max_pairs - len(pos), 2), np.int64)])
+                neg = rng.integers(0, n_real, pos.shape)
+                params, ost, loss = full_train_step(
+                    params, ost, xs, sub_ops, ls, jnp.asarray(mask), cfg,
+                    opt, neg_pairs=jnp.asarray(neg),
+                    pos_pairs=jnp.asarray(pos),
+                    pair_mask=jnp.asarray(pmask))
+            else:
+                params, ost, loss = full_train_step(
+                    params, ost, xs, sub_ops, ls, jnp.asarray(mask),
+                    cfg, opt)
+            max_sub = max(max_sub, n_real)
+            max_msg = max(max_msg, len(src))
+        if (ep + 1) % eval_every == 0 or ep == epochs - 1:
+            m = _evaluate(params, g, cfg, x, ops)
+            hist.append({"epoch": ep + 1, "time": time.time() - t0, **m})
+    return {"history": hist, "final": hist[-1], "params": params,
+            "mem_bytes": subgraph_batch_bytes(max_sub, max_msg, cfg.hidden,
+                                              cfg.n_layers),
+            "messages": max_msg * cfg.n_layers}
+
+
+# ---------------------------------------------------------------------------
+# VQ mini-batched inference (paper Sec. 6 inference speedup + inductive)
+# ---------------------------------------------------------------------------
+
+def vq_inference(params, vq_states, g: Graph, cfg: GNNConfig,
+                 batch_size: int, *, inductive: bool = False) -> np.ndarray:
+    """Layer-synchronous mini-batched inference using codeword context.
+
+    Inductive extra step (paper Sec. 6): unseen nodes get their codeword
+    assignment from the *feature half* of the layer's codebook before the
+    layer executes.
+    """
+    ops = full_operands(g)
+    x = jnp.asarray(g.features)
+    cb_cfg = cfg.layer_codebook_cfg()
+    states = list(vq_states)
+    # process the whole node set in batches, layer-locked so that layer
+    # l+1 sees refreshed layer-l assignments for every node
+    from repro.core.conv import refresh_assignment
+    from repro.nn.gnn_layers import BACKBONES
+    from repro.models.gnn import _layer_out_dims, _act_for_layer
+    bk = BACKBONES[cfg.backbone]
+    acts = x
+    for l, (fi, fo) in enumerate(_layer_out_dims(cfg)):
+        st = states[l]
+        if inductive:
+            assign = cbm.assign_features_only(
+                st.codebook, acts, fi, cb_cfg)
+            st = refresh_assignment(st, jnp.arange(g.n), assign)
+            states[l] = st
+        outs = []
+        order = np.arange(g.n)
+        for s in range(0, g.n, batch_size):
+            bidx = order[s:s + batch_size]
+            pack = make_pack(g, bidx)
+            probe = jnp.zeros(bk.probe_shape(len(bidx), fi, fo,
+                                             heads=cfg.heads))
+            y = bk.vq_apply(params[l], acts[bidx], probe, pack, st,
+                            ops.degrees, cb_cfg, _act_for_layer(cfg, l),
+                            fi, fo, inject=False)
+            outs.append(y)
+        acts = jnp.concatenate(outs, axis=0)
+    return np.asarray(acts)

@@ -1,0 +1,145 @@
+"""LM training loop: grad accumulation, checkpoint/restart, failure drills.
+
+The loop is deliberately dumb-robust (1000+-node posture):
+  * every step's data is regenerated from (seed, step) -- no loader state;
+  * checkpoint every N steps (atomic, versioned; async disk write);
+  * on start, resume-from-latest is automatic;
+  * a step that raises is retried once after state restore (simulated
+    preemption handling -- the launcher-level contract; tested in
+    tests/test_fault_tolerance.py by killing and restarting mid-run);
+  * straggler mitigation at this layer = synchronous collectives with the
+    XLA latency-hiding scheduler + deterministic data (a restarted/replaced
+    host recomputes its shard bit-exactly).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.tokens import TokenStreamConfig, batch_shard
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import Optimizer, adam, warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer,
+                    accum: int = 1, accum_dtype=jnp.float32) -> Callable:
+    """Returns jit-able train_step(state, tokens) -> (state, metrics).
+
+    With accum > 1 the global batch is split into microbatches; gradients
+    average across them before one optimizer update (compute/comm overlap:
+    only the final microbatch's gradient participates in the cross-replica
+    reduction under pjit -- XLA sinks the psum out of the accumulation loop).
+    """
+
+    def loss_fn(params, tokens, aux_embeds):
+        return lm.train_loss(params, tokens, cfg, aux_embeds)
+
+    def step_fn(state: TrainState, tokens: jax.Array,
+                aux_embeds: jax.Array | None = None):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                state.params, tokens, aux_embeds)
+        else:
+            # scan over a [accum, mb, S] leading axis (NEVER dynamic-slice
+            # the sharded batch dim -- that forces replication of the
+            # microbatch through GSPMD).  The reshape must put the ORIGINAL
+            # batch-contiguous dim on the mb axis: reshape(accum, mb, ...)
+            # lands the dp sharding on the accum axis and every scanned
+            # microbatch gets replicated (+33 GiB/chip of logits on the
+            # 405B cell -- Perf iteration 5); reshape(mb, accum).swap keeps
+            # each microbatch 1/dp-sharded (strided microbatch composition,
+    # mathematically identical gradient average).
+            mb = tokens.shape[0] // accum
+            tok_r = tokens.reshape(mb, accum, *tokens.shape[1:]
+                                   ).swapaxes(0, 1)
+            aux_r = None if aux_embeds is None else \
+                aux_embeds.reshape(mb, accum, *aux_embeds.shape[1:]
+                                   ).swapaxes(0, 1)
+
+            def micro(c, xs):
+                tok = xs[0]
+                aux = xs[1] if aux_r is not None else None
+                l, g = jax.value_and_grad(loss_fn)(state.params, tok, aux)
+                acc_l, acc_g = c
+                return (acc_l + l, jax.tree_util.tree_map(
+                    lambda a, b: (a + b.astype(a.dtype)), acc_g, g)), None
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), state.params)
+            xs = (tok_r,) if aux_r is None else (tok_r, aux_r)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros(()), zero_g), xs)
+            loss = loss / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        new_params, new_opt = opt.update(grads, state.opt, state.params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return TrainState(new_params, new_opt, state.step + 1), \
+            {"loss": loss, "grad_norm": gnorm}
+
+    return step_fn
+
+
+def train(cfg: ArchConfig, *, steps: int, batch: int, seq_len: int,
+          lr: float = 3e-4, accum: int = 1, seed: int = 0,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+          log_every: int = 10,
+          inject_failure_at: Optional[int] = None) -> dict:
+    """Single-host training driver (the pjit pod driver lives in
+    repro/launch/train.py and shares make_train_step)."""
+    key = jax.random.PRNGKey(seed)
+    params = lm.init_lm(key, cfg)
+    opt = adam(warmup_cosine(lr, max(10, steps // 20), steps), clip_norm=1.0)
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+    start_step = 0
+    if ckpt_dir is not None:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            state, manifest = ckpt.restore(ckpt_dir, state)
+            start_step = manifest["step"]
+
+    ds = TokenStreamConfig(vocab=cfg.vocab, seq_len=seq_len + 1,
+                           global_batch=batch, seed=seed)
+    step_fn = jax.jit(make_train_step(cfg, opt, accum))
+
+    history = []
+    t0 = time.time()
+    s = start_step
+    while s < steps:
+        tokens = jnp.asarray(batch_shard(ds, s, 0, 1))
+        try:
+            if inject_failure_at is not None and s == inject_failure_at:
+                inject_failure_at = None
+                raise RuntimeError("injected node failure (drill)")
+            state, metrics = step_fn(state, tokens)
+        except RuntimeError:
+            # preemption drill: restore-from-latest and retry this step
+            if ckpt_dir is not None and ckpt.latest_step(ckpt_dir) is not None:
+                state, manifest = ckpt.restore(ckpt_dir, state)
+                s = manifest["step"]
+                continue
+            raise
+        s += 1
+        if s % log_every == 0 or s == steps:
+            history.append({"step": s, "loss": float(metrics["loss"]),
+                            "time": time.time() - t0})
+        if ckpt_dir is not None and s % ckpt_every == 0:
+            ckpt.save(ckpt_dir, s,
+                      TrainState(state.params, state.opt,
+                                 jnp.asarray(s, jnp.int32)),
+                      {"data_seed": seed}, async_write=False)
+    return {"history": history, "state": state}

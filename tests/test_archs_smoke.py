@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train step + one decode step on CPU; asserts shapes + finiteness.
+(The FULL configs are exercised only via the dry-run, per the assignment.)
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, SMOKES, get_smoke
+from repro.models.lm import (init_lm, init_serve_cache, prefill, serve_step,
+                             train_loss)
+
+ALL = list(ARCHS)
+
+
+def _aux(cfg, b, key):
+    if cfg.family == "audio":
+        return jax.random.normal(key, (b, cfg.enc_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        return jax.random.normal(key, (b, cfg.n_patches, cfg.d_model))
+    return None
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_train_step_smoke(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    b, s = 2, 32
+    tokens = jax.random.randint(key, (b, s + 1), 0, cfg.vocab)
+    aux = _aux(cfg, b, key)
+    loss, grads = jax.value_and_grad(
+        lambda p: train_loss(p, tokens, cfg, aux))(params)
+    assert jnp.isfinite(loss), arch
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(leaf).all()), arch
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_decode_smoke(arch):
+    cfg = get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    b = 2
+    cache = init_serve_cache(cfg, b, 64)
+    tok = jax.random.randint(key, (b, 1), 0, cfg.vocab)
+    logits, cache = serve_step(params, tok, cache, cfg)
+    assert logits.shape == (b, cfg.vocab), arch
+    assert bool(jnp.isfinite(logits).all()), arch
+    # second step must advance cleanly on the updated cache
+    logits2, cache = serve_step(params, tok, cache, cfg)
+    assert bool(jnp.isfinite(logits2).all()), arch
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen3-moe-30b-a3b"])
+def test_vq_attention_variant_smoke(arch):
+    """The paper's technique as a config flag on the LM archs."""
+    cfg = get_smoke(arch).with_vq(k=8, window=8)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(key, cfg)
+    tokens = jax.random.randint(key, (2, 33), 0, cfg.vocab)
+    loss = train_loss(params, tokens, cfg)
+    assert jnp.isfinite(loss)
+    cache = init_serve_cache(cfg, 2, 64)
+    logits, _ = serve_step(params, tokens[:, :1], cache, cfg)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_prefill_smoke():
+    cfg = get_smoke("granite-3-8b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    out = prefill(params, tokens, cfg)
+    assert out.shape == (2, cfg.vocab)
+
+
+def test_exact_configs_match_assignment():
+    """The full configs carry the exact assigned numbers."""
+    a = ARCHS
+    g = a["granite-3-8b"]
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab) == (40, 4096, 32, 8, 12800, 49155)
+    l = a["llama3-405b"]
+    assert (l.n_layers, l.d_model, l.n_heads, l.n_kv_heads, l.d_ff,
+            l.vocab) == (126, 16384, 128, 8, 53248, 128256)
+    q = a["qwen3-32b"]
+    assert (q.n_layers, q.d_model, q.n_heads, q.d_ff,
+            q.vocab, q.qk_norm) == (64, 5120, 64, 25600, 151936, True)
+    m = a["qwen3-moe-30b-a3b"]
+    assert (m.n_experts, m.top_k, m.d_ff, m.d_model) == (128, 8, 768, 2048)
+    p = a["phi3.5-moe-42b-a6.6b"]
+    assert (p.n_experts, p.top_k, p.d_ff) == (16, 2, 6400)
+    z = a["zamba2-2.7b"]
+    assert (z.ssm_state, z.n_layers, z.d_model) == (64, 54, 2560)
+    w = a["whisper-tiny"]
+    assert (w.n_layers, w.d_model, w.n_heads, w.d_ff) == (4, 384, 6, 1536)
+    v = a["llama-3.2-vision-11b"]
+    assert (v.n_layers, v.d_model, v.d_ff, v.vocab) == (40, 4096, 14336,
+                                                        128256)
+    x = a["xlstm-350m"]
+    assert (x.n_layers, x.d_model, x.n_heads) == (24, 1024, 4)
+    ll = a["llama3.2-3b"]
+    assert (ll.n_layers, ll.d_model, ll.n_heads, ll.d_ff) == (28, 3072, 24,
+                                                              8192)

@@ -1,0 +1,149 @@
+"""Per-kernel validation: shape/dtype sweeps vs the ref.py jnp oracles,
+executed in interpret mode (the sanctioned CPU path for Pallas TPU kernels).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.spmm_ell import spmm_ell_pallas
+from repro.kernels.vq_assign import vq_assign_pallas
+from repro.kernels.vq_attention import vq_attention_decode_pallas
+
+
+# ---------------------------------------------------------------------------
+# vq_assign
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,k,f", [(1, 1, 1), (7, 3, 5), (64, 16, 4),
+                                   (130, 33, 12), (256, 512, 128),
+                                   (100, 1024, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vq_assign_sweep(b, k, f, dtype):
+    kx, kc = jax.random.split(jax.random.PRNGKey(b * 131 + k))
+    x = jax.random.normal(kx, (b, f), dtype)
+    c = jax.random.normal(kc, (k, f), dtype)
+    got = vq_assign_pallas(x, c, interpret=True)
+    want = ref.vq_assign(x, c)
+    # ties can legitimately differ: accept either when distances are equal
+    x32, c32 = x.astype(jnp.float32), c.astype(jnp.float32)
+    d = ((x32[:, None] - c32[None]) ** 2).sum(-1)
+    d_got = jnp.take_along_axis(d, got[:, None].astype(jnp.int32), 1)[:, 0]
+    d_want = jnp.take_along_axis(d, want[:, None].astype(jnp.int32), 1)[:, 0]
+    assert_allclose(np.asarray(d_got), np.asarray(d_want), rtol=1e-5,
+                    atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 40), k=st.integers(1, 40), f=st.integers(1, 24))
+def test_vq_assign_hypothesis(b, k, f):
+    kx, kc = jax.random.split(jax.random.PRNGKey(b * 7919 + k * 31 + f))
+    x = jax.random.normal(kx, (b, f))
+    c = jax.random.normal(kc, (k, f))
+    got = vq_assign_pallas(x, c, interpret=True)
+    assert got.shape == (b,)
+    assert int(got.min()) >= 0 and int(got.max()) < k
+
+
+# ---------------------------------------------------------------------------
+# spmm_ell
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,deg,n,f", [(1, 1, 1, 1), (8, 4, 16, 8),
+                                       (33, 7, 50, 12), (128, 32, 300, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_ell_sweep(b, deg, n, f, dtype):
+    key = jax.random.PRNGKey(b + deg * 100)
+    k1, k2, k3 = jax.random.split(key, 3)
+    idx = jax.random.randint(k1, (b, deg), 0, n)
+    val = jax.random.normal(k2, (b, deg), jnp.float32)
+    x = jax.random.normal(k3, (n, f), dtype)
+    got = spmm_ell_pallas(idx, val, x, interpret=True)
+    want = ref.spmm_ell(idx, val, x)
+    assert_allclose(np.asarray(got), np.asarray(want),
+                    rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                    atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_spmm_ell_padding_zero_vals():
+    idx = jnp.array([[5, 0], [2, 1]], jnp.int32)
+    val = jnp.array([[1.0, 0.0], [0.5, 0.0]])   # second slot is padding
+    x = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    got = spmm_ell_pallas(idx, val, x, interpret=True)
+    want = jnp.stack([x[5], 0.5 * x[2]])
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 128, 32), (2, 3, 256, 64),
+                                     (1, 2, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, s, d, causal):
+    key = jax.random.PRNGKey(s + d)
+    q, k, v = (jax.random.normal(kk, (b, h, s, d))
+               for kk in jax.random.split(key, 3))
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=128, bk=128,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(kk, (1, 2, 256, 64), jnp.bfloat16)
+               for kk in jax.random.split(key, 3))
+    got = flash_attention_pallas(q, k, v, causal=True, bq=128, bk=128,
+                                 interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# vq_attention decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,g,d,kcb,w", [(1, 1, 8, 4, 4), (4, 2, 32, 16, 8),
+                                         (6, 4, 64, 128, 32)])
+def test_vq_attention_decode_sweep(n, g, d, kcb, w):
+    key = jax.random.PRNGKey(n * 17 + kcb)
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (n, g, d))
+    cbk = jax.random.normal(ks[1], (n, kcb, d))
+    cbv = jax.random.normal(ks[2], (n, kcb, d))
+    mass = jnp.abs(jax.random.normal(ks[3], (n, kcb))) + 0.1
+    wk = jax.random.normal(ks[4], (n, w, d))
+    wv = jax.random.normal(ks[5], (n, w, d))
+    wm = jnp.ones((n, w))
+    got = vq_attention_decode_pallas(q, cbk, cbv, mass, wk, wv, wm,
+                                     interpret=True)
+    want = jax.vmap(lambda *a: ref.vq_attention_decode(*a))(
+        q, cbk, cbv, mass, wk, wv, wm)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_vq_attention_decode_masked_window():
+    """Masked window slots and zero-mass clusters must not contribute."""
+    n, g, d, kcb, w = 2, 2, 16, 8, 4
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (n, g, d))
+    cbk = jax.random.normal(ks[1], (n, kcb, d))
+    cbv = jax.random.normal(ks[2], (n, kcb, d))
+    mass = jnp.zeros((n, kcb)).at[:, 0].set(2.0)
+    wk = jax.random.normal(ks[4], (n, w, d))
+    wv = jax.random.normal(ks[5], (n, w, d))
+    wm = jnp.zeros((n, w)).at[:, 0].set(1.0)
+    got = vq_attention_decode_pallas(q, cbk, cbv, mass, wk, wv, wm,
+                                     interpret=True)
+    want = jax.vmap(lambda *a: ref.vq_attention_decode(*a))(
+        q, cbk, cbv, mass, wk, wv, wm)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+    assert np.isfinite(np.asarray(got)).all()

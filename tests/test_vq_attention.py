@@ -1,0 +1,110 @@
+"""VQ-Attention (the paper's technique on the token graph): invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels import ref
+from repro.nn.vq_attention import (VQAttnConfig, init_vq_cache,
+                                   vq_attention_decode, vq_attention_train)
+
+
+def _exact_gqa(q, k, v):
+    g = q.shape[2] // k.shape[2]
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    return ref.flash_attention(
+        q.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+        vv.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+
+
+def _rand_qkv(key, b=2, s=64, hq=4, hkv=2, dh=16):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (b, s, hq, dh)),
+            jax.random.normal(ks[1], (b, s, hkv, dh)),
+            jax.random.normal(ks[2], (b, s, hkv, dh)))
+
+
+def test_exact_when_context_fits_window():
+    """S <= 2W: the codebook is never consulted -> identical to exact
+    attention (the C_in term covers everything; paper's exact-recovery)."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(0), s=64)
+    o_vq = vq_attention_train(q, k, v, VQAttnConfig(k=8, window=32))
+    o_ex = _exact_gqa(q, k, v)
+    assert_allclose(np.asarray(o_vq), np.asarray(o_ex), rtol=1e-4, atol=1e-4)
+
+
+def test_error_decreases_with_codebook_size():
+    q, k, v = _rand_qkv(jax.random.PRNGKey(1), s=128)
+    o_ex = _exact_gqa(q, k, v)
+    errs = []
+    for kcb in (2, 8, 64):
+        o = vq_attention_train(q, k, v, VQAttnConfig(k=kcb, window=8))
+        errs.append(float(jnp.abs(o - o_ex).mean()))
+    assert errs[2] < errs[0]
+
+
+def test_clustered_keys_near_exact():
+    """When past keys genuinely cluster (the paper's regime), VQ attention
+    approaches exact attention even with a small codebook."""
+    key = jax.random.PRNGKey(2)
+    b, s, hq, hkv, dh = 1, 256, 2, 1, 16
+    centers = jax.random.normal(key, (4, dh))
+    idx = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, 4)
+    k = centers[idx][:, :, None, :] + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(4), (b, s, hkv, dh))
+    v = centers[idx][:, :, None, :] + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(5), (b, s, hkv, dh))
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, s, hq, dh))
+    o_ex = _exact_gqa(q, k, v)
+    o_vq = vq_attention_train(q, k, v, VQAttnConfig(k=16, window=32))
+    rel = float(jnp.abs(o_vq - o_ex).mean() / jnp.abs(o_ex).mean())
+    assert rel < 0.12, rel
+
+
+def test_train_is_differentiable_through_codebook():
+    """Straight-through centroids: gradients flow to PAST tokens' k/v
+    (the LM replacement for Eq. 7 -- DESIGN.md section 4)."""
+    q, k, v = _rand_qkv(jax.random.PRNGKey(7), s=64)
+    cfg = VQAttnConfig(k=8, window=8)
+
+    def loss(kv):
+        kk, vv = kv
+        o = vq_attention_train(q, kk, vv, cfg)
+        return jnp.sum(o[:, -8:] ** 2)    # loss only on the LAST block
+
+    gk, gv = jax.grad(loss)((k, v))
+    # early tokens are reachable only through the codebook -> nonzero grads
+    assert float(jnp.abs(gk[:, :16]).sum()) > 0
+    assert float(jnp.abs(gv[:, :16]).sum()) > 0
+
+
+def test_decode_matches_train_regime():
+    q, k, v = _rand_qkv(jax.random.PRNGKey(8), s=64)
+    cfg = VQAttnConfig(k=16, window=16)
+    cache = init_vq_cache(2, 2, 16, cfg, jnp.float32)
+    outs = []
+    for t in range(64):
+        o, cache = vq_attention_decode(q[:, t:t + 1], k[:, t:t + 1],
+                                       v[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    o_dec = jnp.concatenate(outs, axis=1)
+    o_tr = vq_attention_train(q, k, v, cfg)
+    rel = float(jnp.abs(o_dec - o_tr).mean() / jnp.abs(o_tr).mean())
+    assert rel < 0.3, rel
+    assert int(cache.pos) == 64
+    # codebook masses account for all evicted tokens
+    assert_allclose(float(cache.count.sum()) / (2 * 2), 64 - 16, atol=1e-3)
+
+
+def test_decode_cache_is_constant_size():
+    cfg = VQAttnConfig(k=8, window=4)
+    cache = init_vq_cache(1, 1, 8, cfg, jnp.float32)
+    sizes0 = jax.tree_util.tree_map(lambda a: a.shape, cache)
+    key = jax.random.PRNGKey(0)
+    for t in range(32):
+        q = jax.random.normal(key, (1, 1, 2, 8))
+        kv = jax.random.normal(key, (1, 1, 1, 8))
+        _, cache = vq_attention_decode(q, kv, kv, cache, cfg)
+    assert jax.tree_util.tree_map(lambda a: a.shape, cache) == sizes0
