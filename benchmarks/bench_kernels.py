@@ -9,9 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.spmm_ell import spmm_ell_pallas
+from repro.kernels.spmm_ell_hbm import spmm_ell_hbm_pallas
 from repro.kernels.vq_assign import vq_assign_pallas
 from repro.kernels.vq_attention import vq_attention_decode_pallas
 
@@ -46,6 +47,33 @@ def run() -> list[tuple]:
                idx, val, xs)
     rows.append(("kernel/spmm_ell/256x16x64", us,
                  f"maxerr={float(jnp.abs(got-want).max()):.2e}"))
+
+    # resident vs HBM variant sweep over source-matrix sizes.  The last
+    # shapes exceed the default 8 MiB resident VMEM envelope (the dispatch
+    # in kernels/ops.py would pick 'hbm' for them); both variants report so
+    # the crossover is visible in one run.
+    for (b, deg, n, f) in [(256, 16, 512, 64),       # resident regime
+                           (256, 16, 4096, 128),     # 2 MiB source
+                           (512, 16, 16384, 128),    # 8 MiB boundary
+                           (512, 16, 32768, 128)]:   # 16 MiB -> HBM regime
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + f), 3)
+        idx = jax.random.randint(k1, (b, deg), 0, n)
+        val = jax.random.normal(k2, (b, deg))
+        xs = jax.random.normal(k3, (n, f))
+        variant = ops.spmm_ell_variant(n, f, 4)
+        got_r = spmm_ell_pallas(idx, val, xs, interpret=True)
+        got_h = spmm_ell_hbm_pallas(idx, val, xs, interpret=True)
+        want = ref.spmm_ell(idx, val, xs)
+        us_r = _time(lambda a, c, x_: spmm_ell_pallas(
+            a, c, x_, interpret=True), idx, val, xs)
+        us_h = _time(lambda a, c, x_: spmm_ell_hbm_pallas(
+            a, c, x_, interpret=True), idx, val, xs)
+        tag = f"{b}x{deg}_src{n}x{f}"
+        rows.append((f"kernel/spmm_ell_resident/{tag}", us_r,
+                     f"maxerr={float(jnp.abs(got_r-want).max()):.2e}"))
+        rows.append((f"kernel/spmm_ell_hbm/{tag}", us_h,
+                     f"maxerr={float(jnp.abs(got_h-want).max()):.2e},"
+                     f"dispatch={variant}"))
 
     q, k, v = (jax.random.normal(kk, (1, 4, 512, 64))
                for kk in jax.random.split(key, 3))

@@ -11,13 +11,14 @@ the graph pipeline) + the current VQ state into the per-convolution
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.codebook import CodebookState, CodebookConfig
 from repro.core.message_passing import ConvOperands
+from repro.kernels.spmm_ell_hbm import StripeIndex
 
 
 class MinibatchPack(NamedTuple):
@@ -28,6 +29,9 @@ class MinibatchPack(NamedTuple):
     ``rev_*`` are the out-edges (messages FROM batch nodes -- the "blue"
     backward messages of Fig. 2).  Positions are the index inside the batch
     if the other endpoint is also in the batch, else -1.
+    ``stripe_index`` (optional, built by the packer) is the tile->stripes
+    scalar-prefetch metadata for the intra-batch term's HBM SpMM variant,
+    used when b * f exceeds the VMEM envelope (DESIGN.md section 3).
     """
     batch_ids: jax.Array   # [b]      global node ids
     nbr_ids: jax.Array     # [b, D]   in-neighbor global ids (0 on padding)
@@ -36,6 +40,7 @@ class MinibatchPack(NamedTuple):
     rev_ids: jax.Array     # [b, Dr]  out-edge target global ids
     rev_mask: jax.Array    # [b, Dr]
     rev_pos: jax.Array     # [b, Dr]
+    stripe_index: Optional[StripeIndex] = None
 
     @property
     def b(self) -> int:
@@ -127,7 +132,8 @@ def fixed_conv_operands(kind: str, pack: MinibatchPack,
     ops_ = ConvOperands(
         in_pos=pack.nbr_pos, in_vals=in_vals,
         out_ids=pack.nbr_ids, out_vals=out_vals,
-        rev_ids=pack.rev_ids, rev_vals=rev_vals)
+        rev_ids=pack.rev_ids, rev_vals=rev_vals,
+        stripe_index=pack.stripe_index)
     return ops_, self_vals
 
 

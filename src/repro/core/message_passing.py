@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels.spmm_ell_hbm import StripeIndex
 
 
 # ---------------------------------------------------------------------------
@@ -108,11 +109,19 @@ def context_messages_reconstruct(out_vals: jax.Array, out_ids: jax.Array,
     out_ids:  [b, D]   their global node ids
     feat_codewords: [n_branches, k, f_blk];  assignment: [n_branches, n]
     returns   [b, f]   =  sum_d out_vals[:, d] * X^_{j_d}
+
+    Routed per branch through the SpMM-ELL dispatch: the gather source is
+    the branch's [k, f_blk] codeword table, so per-branch memory stays
+    O(k * f_blk) regardless of graph size and the [b, D, f] reconstructed
+    intermediate of the naive form is never materialized on device
+    (DESIGN.md section 3) -- sum_d val[:, d] * cw[assign[out_ids[:, d]]]
+    is exactly an ELLPACK SpMM with the assignment as the index map.
     """
-    feats_hat = reconstruct(feat_codewords, assignment, out_ids)   # [b, D, f]
-    feats_hat = jax.lax.stop_gradient(feats_hat)
-    return jnp.einsum('bd,bdf->bf', out_vals.astype(jnp.float32),
-                      feats_hat.astype(jnp.float32))
+    cw = jax.lax.stop_gradient(feat_codewords)
+    branch_ids = assignment[:, out_ids]                   # [nb, b, D]
+    per_branch = [kops.spmm_ell(branch_ids[i], out_vals, cw[i])
+                  for i in range(feat_codewords.shape[0])]
+    return jnp.concatenate(per_branch, axis=-1)
 
 
 def context_messages_sketch(c_out_sketch: jax.Array,
@@ -135,16 +144,19 @@ def context_messages_sketch(c_out_sketch: jax.Array,
 # ---------------------------------------------------------------------------
 
 def intra_messages(in_pos: jax.Array, in_vals: jax.Array,
-                   x_b: jax.Array) -> jax.Array:
+                   x_b: jax.Array,
+                   stripe_index: Optional[StripeIndex] = None) -> jax.Array:
     """Exact intra-mini-batch messages  C_in X_B.
 
     in_pos:  [b, D] int32 -- neighbor position inside the batch (-1 padding /
              out-of-batch; those slots must carry in_vals == 0)
     in_vals: [b, D]
     x_b:     [b, f]
+    stripe_index: pack-time tile->stripes metadata for the HBM SpMM variant
+             (inference-scale batches where b * f exceeds VMEM)
     """
     idx = jnp.maximum(in_pos, 0)
-    return kops.spmm_ell(idx, in_vals, x_b)
+    return kops.spmm_ell(idx, in_vals, x_b, stripe_index)
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +174,7 @@ class ConvOperands(NamedTuple):
     out_vals: jax.Array    # [b, D]   C_out values (0 on padding)
     rev_ids: jax.Array     # [b, Dr]  reverse-edge (batch -> out) target ids
     rev_vals: jax.Array    # [b, Dr]  C^T_out values (0 on padding)
+    stripe_index: Optional[StripeIndex] = None  # intra-term HBM metadata
 
 
 def approx_message_passing(ops_: ConvOperands, x_b: jax.Array,
@@ -180,7 +193,7 @@ def approx_message_passing(ops_: ConvOperands, x_b: jax.Array,
         grad_hat = reconstruct(grad_codewords, assignment, ops_.rev_ids)
         grad_hat = jax.lax.stop_gradient(grad_hat)      # [b, Dr, f_grad]
         x_b = inject_context_grad(x_b, ops_.rev_vals, grad_hat, w)
-    m = intra_messages(ops_.in_pos, ops_.in_vals, x_b)
+    m = intra_messages(ops_.in_pos, ops_.in_vals, x_b, ops_.stripe_index)
     m = m + context_messages_reconstruct(
         ops_.out_vals, ops_.out_ids, feat_codewords, assignment)
     return m

@@ -7,13 +7,14 @@ its data shard; here it is a numpy routine feeding jit'd steps.
 """
 from __future__ import annotations
 
-from typing import Iterator, NamedTuple
+from typing import Iterator, NamedTuple, Optional
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.conv import MinibatchPack
 from repro.graph.structure import CSR, Graph
+from repro.kernels.spmm_ell_hbm import StripeIndex, clamp_tiles
 
 
 def _pack_rows(csr: CSR, ids: np.ndarray, deg_cap: int,
@@ -31,19 +32,78 @@ def _pack_rows(csr: CSR, ids: np.ndarray, deg_cap: int,
     return nbr, mask, pos
 
 
-def make_pack(g: Graph, batch_ids: np.ndarray, deg_cap: int | None = None
-              ) -> MinibatchPack:
+def make_stripe_index(nbr_idx: np.ndarray, n_src: int, *,
+                      mask: np.ndarray | None = None,
+                      bb: int = 128, stripe: int = 512,
+                      max_stripes: int | None = None) -> StripeIndex:
+    """Host-side tile->stripes metadata for the HBM SpMM kernel.
+
+    Built at batch-pack time so the scalar-prefetch operands ride along
+    with the pack instead of being recomputed in-jit every step.  ``mask``
+    marks real (non-padding) neighbor slots; padding slots touch no stripe.
+    Mirrors the kernel's tile clamping (``clamp_tiles``) so the index is
+    valid for ``spmm_ell_hbm_pallas`` on a [len(nbr_idx), n_src-row] call.
+
+    The ids width is shape-derived -- min(n_stripes, bb * deg) -- NOT the
+    batch's observed maximum, so successive packs of the same dataset keep
+    identical shapes and jit'd steps never retrace.  ``max_stripes`` caps
+    it tighter (e.g. a measured dataset locality bound, keeping the
+    scalar-prefetch operand small on huge graphs); a batch exceeding the
+    cap raises rather than silently dropping stripes.
+    """
+    nbr_idx = np.asarray(nbr_idx)
+    b, deg = nbr_idx.shape
+    bb, stripe = clamp_tiles(b, n_src, bb, stripe)
+    bp = (b + bb - 1) // bb * bb
+    nt = bp // bb
+    n_stripes = (n_src + stripe - 1) // stripe
+    sid = np.zeros((bp, deg), np.int64)
+    valid = np.zeros((bp, deg), bool)
+    sid[:b] = np.clip(nbr_idx, 0, None) // stripe
+    valid[:b] = np.ones((b, deg), bool) if mask is None \
+        else np.asarray(mask) != 0
+    sid, valid = sid.reshape(nt, bb * deg), valid.reshape(nt, bb * deg)
+    per_tile = [np.unique(sid[t][valid[t]]) for t in range(nt)]
+    ms = max_stripes if max_stripes is not None \
+        else max(1, min(n_stripes, bb * deg))
+    worst = max((len(u) for u in per_tile), default=0)
+    if worst > ms:
+        raise ValueError(
+            f"a row tile touches {worst} stripes > max_stripes={ms}; "
+            f"raise the cap or the stripe size")
+    ids = np.zeros((nt, ms), np.int32)
+    counts = np.zeros((nt,), np.int32)
+    for t, u in enumerate(per_tile):
+        ids[t, :len(u)] = u
+        counts[t] = len(u)
+    return StripeIndex(jnp.asarray(ids), jnp.asarray(counts),
+                       bb=bb, stripe=stripe, n_src=n_src)
+
+
+def make_pack(g: Graph, batch_ids: np.ndarray, deg_cap: int | None = None,
+              *, stripe_index: bool = False, stripe_bb: int = 128,
+              stripe: int = 512) -> MinibatchPack:
+    """Pack a mini-batch; with ``stripe_index=True`` also emit the
+    tile->stripes metadata the HBM SpMM kernel's scalar prefetch needs for
+    the intra-batch term (source rows = batch positions)."""
     deg_cap = deg_cap or g.max_degree()
     inv = np.full(g.n, -1, np.int32)
     inv[batch_ids] = np.arange(len(batch_ids), dtype=np.int32)
     nbr, nmask, npos = _pack_rows(g.in_csr, batch_ids, deg_cap, inv)
     rev, rmask, rpos = _pack_rows(g.out_csr, batch_ids, deg_cap, inv)
+    sidx: Optional[StripeIndex] = None
+    if stripe_index:
+        # intra-term gather source is x_b: indices are in-batch positions,
+        # valid only where the neighbor is itself in the batch
+        sidx = make_stripe_index(np.maximum(npos, 0), len(batch_ids),
+                                 mask=(npos >= 0) & (nmask != 0),
+                                 bb=stripe_bb, stripe=stripe)
     return MinibatchPack(
         batch_ids=jnp.asarray(batch_ids.astype(np.int32)),
         nbr_ids=jnp.asarray(nbr), nbr_mask=jnp.asarray(nmask),
         nbr_pos=jnp.asarray(npos),
         rev_ids=jnp.asarray(rev), rev_mask=jnp.asarray(rmask),
-        rev_pos=jnp.asarray(rpos))
+        rev_pos=jnp.asarray(rpos), stripe_index=sidx)
 
 
 class FullGraphOperands(NamedTuple):
@@ -51,20 +111,28 @@ class FullGraphOperands(NamedTuple):
 
     Used by the full-graph oracle, the sampling baselines (on their sampled
     subgraphs) and the inference path.  NamedTuple -> a jit-able pytree.
+    ``stripe_index`` (optional) carries the tile->stripes metadata that
+    routes the [n, f] feature matrix through the HBM SpMM variant when it
+    exceeds the VMEM envelope (DESIGN.md section 3).
     """
     nbr_ids: jnp.ndarray    # [n, D]
     nbr_mask: jnp.ndarray   # [n, D]
     degrees: jnp.ndarray    # [n]
+    stripe_index: Optional[StripeIndex] = None
 
 
-def full_operands(g: Graph, deg_cap: int | None = None) -> FullGraphOperands:
+def full_operands(g: Graph, deg_cap: int | None = None, *,
+                  stripe_index: bool = False, stripe_bb: int = 128,
+                  stripe: int = 512) -> FullGraphOperands:
     deg_cap = deg_cap or g.max_degree()
     inv = np.arange(g.n, dtype=np.int32)   # every node is "in batch"
     ids = np.arange(g.n)
     nbr, mask, _ = _pack_rows(g.in_csr, ids, deg_cap, inv)
+    sidx = make_stripe_index(nbr, g.n, mask=mask, bb=stripe_bb,
+                             stripe=stripe) if stripe_index else None
     return FullGraphOperands(
         nbr_ids=jnp.asarray(nbr), nbr_mask=jnp.asarray(mask),
-        degrees=jnp.asarray(g.degrees()))
+        degrees=jnp.asarray(g.degrees()), stripe_index=sidx)
 
 
 def subgraph_operands(src: np.ndarray, dst: np.ndarray, n_sub: int,

@@ -7,16 +7,22 @@ Set REPRO_FORCE_PALLAS=1 to route every call through the interpret-mode
 kernels instead (used by the kernel test sweeps and CI).
 
 Production notes (TPU):
-  * ``spmm_ell``: for n_src * f beyond VMEM the source matrix lives in
-    memory_space=ANY and rows are DMA'd in double-buffered stripes keyed by a
-    scalar-prefetched tile->rows index (PrefetchScalarGridSpec); the resident
-    variant here is the validated core loop.
+  * ``spmm_ell`` has two variants (DESIGN.md section 3, resident vs HBM):
+    the resident kernel holds the full source matrix in VMEM; for
+    n_src * f beyond the VMEM envelope the HBM variant keeps it in
+    memory_space=ANY and DMAs double-buffered row stripes keyed by a
+    scalar-prefetched tile->stripes index (PrefetchScalarGridSpec).  The
+    size-based dispatch below picks the variant; override with
+    REPRO_SPMM_VARIANT / REPRO_SPMM_VMEM_BUDGET_MB or
+    ``configure_spmm_dispatch``.
   * ``flash_attention``: 32k+ sequences use a (bh, nq, nk) grid with carried
-    scratch instead of the resident-KV loop.
+    scratch instead of the resident-KV loop (the HBM SpMM kernel's
+    double-buffering idiom is the template; still TODO).
 """
 from __future__ import annotations
 
 import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.vq_assign import vq_assign_pallas
 from repro.kernels.spmm_ell import spmm_ell_pallas
+from repro.kernels.spmm_ell_hbm import StripeIndex, spmm_ell_hbm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.vq_attention import vq_attention_decode_pallas
 
@@ -41,10 +48,66 @@ def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
     return ref.vq_assign(x, codewords)
 
 
-def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array) -> jax.Array:
+# ---------------------------------------------------------------------------
+# spmm_ell resident-vs-HBM dispatch
+# ---------------------------------------------------------------------------
+
+# Per-core VMEM is ~16 MiB; the resident kernel also holds idx/val/out tiles
+# and the compiler wants double-buffering headroom for the streamed blocks,
+# so by default the source matrix gets half.
+_DEFAULT_VMEM_BUDGET_MB = 8.0
+
+# Programmatic overrides (take precedence over the environment) -- the
+# config-file hook for deployments that cannot set env vars per-process.
+_dispatch_overrides: dict[str, object] = {}
+
+
+def configure_spmm_dispatch(variant: Optional[str] = None,
+                            vmem_budget_mb: Optional[float] = None) -> None:
+    """Override spmm_ell dispatch: variant in {'auto', 'resident', 'hbm'}.
+
+    Passing None leaves a setting untouched; 'auto' clears a forced variant.
+    """
+    if variant is not None:
+        if variant not in ("auto", "resident", "hbm"):
+            raise ValueError(f"unknown spmm variant: {variant!r}")
+        _dispatch_overrides["variant"] = variant
+    if vmem_budget_mb is not None:
+        _dispatch_overrides["vmem_budget_mb"] = float(vmem_budget_mb)
+
+
+def spmm_ell_variant(n_src: int, f: int, itemsize: int = 4) -> str:
+    """'resident' or 'hbm' for a [n_src, f] source matrix of `itemsize`."""
+    forced = _dispatch_overrides.get(
+        "variant", os.environ.get("REPRO_SPMM_VARIANT", "auto"))
+    if forced not in ("auto", "resident", "hbm"):
+        raise ValueError(
+            f"REPRO_SPMM_VARIANT={forced!r}: want auto, resident or hbm")
+    if forced in ("resident", "hbm"):
+        return str(forced)
+    budget_mb = _dispatch_overrides.get(
+        "vmem_budget_mb",
+        float(os.environ.get("REPRO_SPMM_VMEM_BUDGET_MB",
+                             str(_DEFAULT_VMEM_BUDGET_MB))))
+    return "hbm" if n_src * f * itemsize > float(budget_mb) * 2 ** 20 \
+        else "resident"
+
+
+def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
+             stripe_index: Optional[StripeIndex] = None) -> jax.Array:
+    """ELLPACK SpMM with size-based resident/HBM variant dispatch.
+
+    ``stripe_index`` (built at batch-pack time by
+    ``repro.graph.batching.make_stripe_index``) is only consumed by the HBM
+    variant; the resident kernel and the CPU oracle ignore it.
+    """
     if _use_pallas():
-        return spmm_ell_pallas(
-            nbr_idx, nbr_val, x, interpret=jax.default_backend() != "tpu")
+        interpret = jax.default_backend() != "tpu"
+        n_src, f = x.shape
+        if spmm_ell_variant(n_src, f, x.dtype.itemsize) == "hbm":
+            return spmm_ell_hbm_pallas(
+                nbr_idx, nbr_val, x, stripe_index, interpret=interpret)
+        return spmm_ell_pallas(nbr_idx, nbr_val, x, interpret=interpret)
     return ref.spmm_ell(nbr_idx, nbr_val, x)
 
 

@@ -1,0 +1,219 @@
+"""Pallas TPU kernel: ELLPACK SpMM with an HBM-resident source matrix.
+
+Production variant of ``spmm_ell`` for ``n_src * f`` beyond the VMEM
+envelope (DESIGN.md section 3, resident vs HBM): the dense source matrix
+``x`` stays in ``memory_space=ANY`` (HBM on a real TPU) and the kernel
+DMAs *stripes* of ``stripe`` contiguous source rows into a double-buffered
+VMEM scratch, so the gather+FMA over stripe ``j`` overlaps the async copy
+of stripe ``j+1``.
+
+Which stripes a row tile needs is data-dependent, so it is scalar-prefetched
+(``PrefetchScalarGridSpec``): a per-tile list of touched stripe ids plus a
+per-tile count, both known before the kernel body runs.  The index is built
+either at batch-pack time on the host (``repro.graph.batching
+.make_stripe_index`` -- the cheap path, it rides along with the pack) or
+in-jit from the neighbor ids as a fallback.
+
+Per-tile work is ``count[t] * deg`` masked gathers from the [stripe, f]
+scratch instead of the resident kernel's ``deg`` gathers from the full
+[n_src, f] block; the win is that VMEM holds ``2 * stripe * f`` source
+elements instead of ``n_src * f``.  Graphs with index locality (sorted node
+ids, clustered batches) touch few stripes per tile and approach the
+resident kernel's arithmetic intensity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@jax.tree_util.register_pytree_node_class
+class StripeIndex:
+    """Per-row-tile neighbor-stripe index for the HBM SpMM kernel.
+
+    ``ids[t, :counts[t]]`` are the (ascending) stripe ids touched by row
+    tile ``t``; entries beyond the count are arbitrary valid stripe ids.
+    ``bb`` / ``stripe`` / ``n_src`` are static (pytree aux data) so a
+    precomputed index pins the kernel's tiling and jit validates the
+    (tile count, source-row count) match at trace time.  The *contents*
+    are trusted: an index built from different neighbor ids than the call's
+    silently drops messages -- build it from the same pack.
+    """
+
+    def __init__(self, ids: jax.Array, counts: jax.Array, *,
+                 bb: int, stripe: int, n_src: int):
+        self.ids = ids          # [num_tiles, max_stripes] int32
+        self.counts = counts    # [num_tiles] int32
+        self.bb = int(bb)
+        self.stripe = int(stripe)
+        self.n_src = int(n_src)
+
+    def tree_flatten(self):
+        return (self.ids, self.counts), (self.bb, self.stripe, self.n_src)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        ids, counts = children
+        bb, stripe, n_src = aux
+        return cls(ids, counts, bb=bb, stripe=stripe, n_src=n_src)
+
+    def __repr__(self):
+        return (f"StripeIndex(tiles={self.ids.shape[0]}, "
+                f"max_stripes={self.ids.shape[1]}, bb={self.bb}, "
+                f"stripe={self.stripe}, n_src={self.n_src})")
+
+
+def _rup(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def clamp_tiles(b: int, n_src: int, bb: int, stripe: int) -> tuple[int, int]:
+    """Shared tile clamping so host-built indices match the kernel grid."""
+    return min(bb, max(8, b)), min(stripe, _rup(n_src, 8))
+
+
+def stripe_index_jnp(nbr_idx: jax.Array, nbr_val: jax.Array, n_src: int, *,
+                     bb: int, stripe: int) -> StripeIndex:
+    """In-jit stripe-index construction (fallback when the pack did not
+    precompute one).  Slots with ``val == 0`` (padding) touch no stripe.
+
+    The ids width is the static bound min(n_stripes, bb * deg) -- a tile of
+    bb rows with deg slots cannot touch more stripes than it has slots.
+    For very large graphs prefer the host-built pack-time index
+    (``repro.graph.batching.make_stripe_index``): it can be capped to the
+    dataset's measured locality, keeping the scalar-prefetch operand small.
+    """
+    b, deg = nbr_idx.shape
+    bb, stripe = clamp_tiles(b, n_src, bb, stripe)
+    bp = _rup(b, bb)
+    nt = bp // bb
+    n_stripes = _rup(n_src, stripe) // stripe
+
+    idx_p = jnp.zeros((bp, deg), jnp.int32).at[:b].set(
+        nbr_idx.astype(jnp.int32))
+    val_p = jnp.zeros((bp, deg), jnp.float32).at[:b].set(
+        nbr_val.astype(jnp.float32))
+    sid = (idx_p // stripe).reshape(nt, bb * deg)
+    # park padding slots in an overflow column that is sliced away
+    sid = jnp.where((val_p != 0.0).reshape(nt, bb * deg), sid, n_stripes)
+    touched = jnp.zeros((nt, n_stripes + 1), bool).at[
+        jnp.arange(nt)[:, None], sid].set(True)[:, :n_stripes]
+    counts = jnp.sum(touched, axis=1).astype(jnp.int32)
+    # stable argsort of ~touched: touched stripes first, ascending id
+    ids = jnp.argsort(~touched, axis=1, stable=True).astype(jnp.int32)
+    ids = ids[:, :min(n_stripes, bb * deg)]
+    return StripeIndex(ids, counts, bb=bb, stripe=stripe, n_src=n_src)
+
+
+def _spmm_ell_hbm_kernel(sid_ref, cnt_ref, idx_ref, val_ref, x_ref, o_ref,
+                         scratch, sems, *, deg: int, stripe: int):
+    t = pl.program_id(0)
+    bb, f = o_ref.shape
+    nst = cnt_ref[t]
+
+    def get_dma(slot, j):
+        s = sid_ref[t, j]
+        return pltpu.make_async_copy(
+            x_ref.at[pl.ds(s * stripe, stripe), :],
+            scratch.at[slot],
+            sems.at[slot])
+
+    @pl.when(nst > 0)
+    def _warmup():
+        get_dma(0, 0).start()
+
+    def stripe_body(j, acc):
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < nst)
+        def _prefetch_next():
+            get_dma(jax.lax.rem(j + 1, 2), j + 1).start()
+
+        get_dma(slot, j).wait()
+        base = sid_ref[t, j] * stripe
+        xs = scratch[slot].astype(jnp.float32)               # [stripe, f]
+
+        def slot_body(d, acc2):
+            loc = idx_ref[:, d] - base                       # [bb]
+            in_stripe = (loc >= 0) & (loc < stripe)
+            rows = xs[jnp.where(in_stripe, loc, 0), :]       # [bb, f]
+            w = jnp.where(in_stripe, val_ref[:, d].astype(jnp.float32), 0.0)
+            return acc2 + w[:, None] * rows
+
+        return jax.lax.fori_loop(0, deg, slot_body, acc)
+
+    acc = jax.lax.fori_loop(0, nst, stripe_body,
+                            jnp.zeros((bb, f), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "stripe", "interpret"))
+def spmm_ell_hbm_pallas(nbr_idx: jax.Array, nbr_val: jax.Array,
+                        x: jax.Array,
+                        stripe_index: StripeIndex | None = None, *,
+                        bb: int = 128, stripe: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """nbr_idx/[b, D] int32, nbr_val/[b, D], x/[n_src, f] -> [b, f] f32.
+
+    Same contract as ``spmm_ell_pallas`` (padding slots carry val == 0),
+    but ``x`` lives in ``memory_space=ANY`` and only ``2 * stripe`` of its
+    rows are ever resident in VMEM.  ``stripe_index`` (from
+    ``repro.graph.batching.make_stripe_index``) skips the in-jit index
+    build; it must have been built for the same ``(b, n_src)`` tiling.
+    As with the resident kernel, callers keep ``f`` lane-aligned (mult. of
+    128) for the compiled TPU path; interpret mode takes any ``f``.
+    """
+    b, deg = nbr_idx.shape
+    n_src, f = x.shape
+    if stripe_index is not None:
+        bb, stripe = stripe_index.bb, stripe_index.stripe
+    else:
+        bb, stripe = clamp_tiles(b, n_src, bb, stripe)
+        stripe_index = stripe_index_jnp(nbr_idx, nbr_val, n_src,
+                                        bb=bb, stripe=stripe)
+    bp = _rup(b, bb)
+    nt = bp // bb
+    np_ = _rup(n_src, stripe)
+    if stripe_index.ids.shape[0] != nt:
+        raise ValueError(
+            f"stripe_index built for {stripe_index.ids.shape[0]} tiles, "
+            f"kernel grid has {nt} (b={b}, bb={bb})")
+    if stripe_index.n_src != n_src:
+        raise ValueError(
+            f"stripe_index built for n_src={stripe_index.n_src}, "
+            f"x has {n_src} rows")
+
+    idx_p = jnp.zeros((bp, deg), jnp.int32).at[:b].set(
+        nbr_idx.astype(jnp.int32))
+    val_p = jnp.zeros((bp, deg), jnp.float32).at[:b].set(
+        nbr_val.astype(jnp.float32))
+    x_p = x if np_ == n_src else \
+        jnp.zeros((np_, f), x.dtype).at[:n_src].set(x)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((bb, deg), lambda i, *_: (i, 0)),
+            pl.BlockSpec((bb, deg), lambda i, *_: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((bb, f), lambda i, *_: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, stripe, f), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_spmm_ell_hbm_kernel, deg=deg, stripe=stripe),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bp, f), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(stripe_index.ids, stripe_index.counts, idx_p, val_p, x_p)
+    return out[:b]

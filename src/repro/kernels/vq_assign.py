@@ -2,7 +2,7 @@
 
 The hot inner loop of VQ-GNN: every mini-batch, every layer, every product-VQ
 branch assigns b vectors to their nearest of k codewords.  On GPU this is a
-cdist + argmin (two kernels + atotmic-free reduction); the TPU formulation is
+cdist + argmin (two kernels + atomic-free reduction); the TPU formulation is
 a single fused kernel:
 
   * distance reduces to  |c|^2 - 2 x.c^T  (the |x|^2 term is constant per

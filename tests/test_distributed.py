@@ -131,7 +131,10 @@ with mesh:
     fn = jax.jit(step, in_shardings=(state_sh, None),
                  out_shardings=(state_sh, shd.replicated(mesh)))
     compiled = fn.lower(state, tok).compile()
-    print("COMPILED_OK", compiled.cost_analysis()["flops"] > 0)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):   # jax < 0.4.x returned one dict per device
+        ca = ca[0]
+    print("COMPILED_OK", ca["flops"] > 0)
 """
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,

@@ -1,0 +1,220 @@
+"""HBM-resident SpMM-ELL variant: parity vs the jnp oracle and the
+VMEM-resident kernel (interpret mode), stripe-index construction, and the
+resident/HBM dispatch heuristic in kernels/ops.py.
+
+The size sweep deliberately includes ``n_src * f`` shapes above the resident
+VMEM envelope used by the dispatch tests (the envelope is configurable, and
+the 20000x64 case is ~5 MiB of f32 -- past the 4 MiB budget the dispatch
+test pins).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from repro.graph.batching import make_stripe_index
+from repro.kernels import ops, ref
+from repro.kernels.spmm_ell import spmm_ell_pallas
+from repro.kernels.spmm_ell_hbm import (StripeIndex, spmm_ell_hbm_pallas,
+                                        stripe_index_jnp)
+
+
+def _case(b, deg, n, f, dtype=jnp.float32, seed=None):
+    key = jax.random.PRNGKey(seed if seed is not None else b * 31 + deg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    idx = jax.random.randint(k1, (b, deg), 0, n).astype(jnp.int32)
+    val = jax.random.normal(k2, (b, deg), jnp.float32)
+    x = jax.random.normal(k3, (n, f), dtype)
+    return idx, val, x
+
+
+# ---------------------------------------------------------------------------
+# parity: HBM variant vs oracle vs resident kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,deg,n,f", [
+    (1, 1, 1, 1),            # degenerate minimum
+    (8, 4, 16, 8),           # everything below one tile/stripe
+    (33, 7, 50, 12),         # b and n both non-multiples of bb/stripe
+    (128, 32, 300, 64),      # multi-tile, multi-stripe
+    (200, 9, 3000, 96),      # many stripes per tile
+    (257, 5, 20000, 64),     # above the 4 MiB resident envelope (5 MiB f32)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spmm_ell_hbm_sweep(b, deg, n, f, dtype):
+    idx, val, x = _case(b, deg, n, f, dtype)
+    got = spmm_ell_hbm_pallas(idx, val, x, interpret=True)
+    want = ref.spmm_ell(idx, val, x)
+    resident = spmm_ell_pallas(idx, val, x, interpret=True)
+    tol = dict(rtol=2e-2, atol=1e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(got), np.asarray(want), **tol)
+    assert_allclose(np.asarray(got), np.asarray(resident), **tol)
+
+
+@pytest.mark.parametrize("bb,stripe", [(8, 8), (16, 64), (128, 512),
+                                       (32, 24)])  # incl. non-pow2 stripe
+def test_spmm_ell_hbm_tile_sizes(bb, stripe):
+    """Non-multiple tile sizes: b % bb != 0 and n % stripe != 0."""
+    idx, val, x = _case(53, 6, 210, 16)
+    got = spmm_ell_hbm_pallas(idx, val, x, bb=bb, stripe=stripe,
+                              interpret=True)
+    want = ref.spmm_ell(idx, val, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_ell_hbm_padding_zero_vals():
+    """Padding slots carry val == 0; their index may point anywhere valid --
+    they must not contribute, nor force a stripe DMA by themselves."""
+    idx = jnp.array([[5, 0], [2, 1]], jnp.int32)
+    val = jnp.array([[1.0, 0.0], [0.5, 0.0]])   # second slot is padding
+    x = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    got = spmm_ell_hbm_pallas(idx, val, x, interpret=True)
+    want = jnp.stack([x[5], 0.5 * x[2]])
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_spmm_ell_hbm_all_padding_rows():
+    """Rows whose every slot is padding (val == 0 everywhere) come out 0."""
+    idx, val, x = _case(40, 4, 100, 8)
+    val = val.at[7].set(0.0).at[23].set(0.0)
+    got = spmm_ell_hbm_pallas(idx, val, x, bb=16, stripe=32, interpret=True)
+    want = ref.spmm_ell(idx, val, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(got)[7] == 0) and np.all(np.asarray(got)[23] == 0)
+
+
+# ---------------------------------------------------------------------------
+# stripe index: host builder vs in-jit fallback
+# ---------------------------------------------------------------------------
+
+def test_stripe_index_host_matches_jnp():
+    idx, val, x = _case(90, 5, 700, 8)
+    mask = (val != 0).astype(np.float32)
+    host = make_stripe_index(np.asarray(idx), x.shape[0],
+                             mask=np.asarray(mask), bb=32, stripe=128)
+    injit = stripe_index_jnp(idx, val, x.shape[0], bb=32, stripe=128)
+    assert host.bb == injit.bb and host.stripe == injit.stripe
+    assert np.array_equal(np.asarray(host.counts), np.asarray(injit.counts))
+    for t in range(host.ids.shape[0]):
+        c = int(host.counts[t])
+        assert np.array_equal(np.asarray(host.ids[t, :c]),
+                              np.asarray(injit.ids[t, :c]))
+
+
+def test_spmm_ell_hbm_precomputed_stripe_index():
+    """Pack-time host index and the in-jit fallback give identical output."""
+    idx, val, x = _case(75, 8, 400, 32)
+    si = make_stripe_index(np.asarray(idx), x.shape[0], bb=32, stripe=64)
+    got = spmm_ell_hbm_pallas(idx, val, x, si, interpret=True)
+    auto = spmm_ell_hbm_pallas(idx, val, x, bb=32, stripe=64, interpret=True)
+    want = ref.spmm_ell(idx, val, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(got), np.asarray(auto), rtol=0, atol=0)
+
+
+def test_stripe_index_mismatched_tiling_raises():
+    idx, val, x = _case(64, 4, 256, 8)
+    bad = make_stripe_index(np.asarray(idx)[:32], x.shape[0],
+                            bb=8, stripe=64)   # built for 4 tiles, not 8
+    with pytest.raises(ValueError, match="tiles"):
+        spmm_ell_hbm_pallas(idx, val, x, bad, interpret=True)
+
+
+def test_stripe_index_mismatched_n_src_raises():
+    idx, val, x = _case(64, 4, 256, 8)
+    bad = make_stripe_index(np.asarray(idx) % 128, 128, bb=8, stripe=64)
+    with pytest.raises(ValueError, match="n_src"):
+        spmm_ell_hbm_pallas(idx, val, x, bad, interpret=True)
+
+
+def test_stripe_index_static_shapes_across_batches():
+    """Successive packs of the same dataset shapes must produce identical
+    StripeIndex shapes (else jit'd train steps retrace every batch)."""
+    rng = np.random.default_rng(0)
+    shapes = set()
+    for _ in range(5):
+        idx = rng.integers(0, 777, (60, 6))
+        si = make_stripe_index(idx, 777, bb=16, stripe=64)
+        shapes.add((si.ids.shape, si.counts.shape, si.bb, si.stripe))
+    assert len(shapes) == 1
+
+
+def test_stripe_index_max_stripes_cap():
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, 1000, (32, 8))
+    si = make_stripe_index(idx, 1000, bb=8, stripe=64, max_stripes=8 * 8)
+    assert si.ids.shape[1] == 64
+    with pytest.raises(ValueError, match="max_stripes"):
+        make_stripe_index(idx, 1000, bb=8, stripe=8, max_stripes=2)
+
+
+# ---------------------------------------------------------------------------
+# ops.py dispatch heuristic
+# ---------------------------------------------------------------------------
+
+def test_spmm_variant_heuristic(monkeypatch):
+    monkeypatch.delenv("REPRO_SPMM_VARIANT", raising=False)
+    monkeypatch.setenv("REPRO_SPMM_VMEM_BUDGET_MB", "4")
+    assert ops.spmm_ell_variant(512, 64) == "resident"
+    assert ops.spmm_ell_variant(20000, 64) == "hbm"       # 5 MiB > 4 MiB
+    monkeypatch.setenv("REPRO_SPMM_VARIANT", "resident")
+    assert ops.spmm_ell_variant(20000, 64) == "resident"
+    monkeypatch.setenv("REPRO_SPMM_VARIANT", "hbm")
+    assert ops.spmm_ell_variant(8, 8) == "hbm"
+
+
+def test_spmm_variant_configure(monkeypatch):
+    monkeypatch.delenv("REPRO_SPMM_VARIANT", raising=False)
+    monkeypatch.delenv("REPRO_SPMM_VMEM_BUDGET_MB", raising=False)
+    try:
+        ops.configure_spmm_dispatch(variant="hbm")
+        assert ops.spmm_ell_variant(8, 8) == "hbm"
+        ops.configure_spmm_dispatch(variant="auto", vmem_budget_mb=0.001)
+        assert ops.spmm_ell_variant(64, 64) == "hbm"
+        with pytest.raises(ValueError):
+            ops.configure_spmm_dispatch(variant="nope")
+    finally:
+        ops._dispatch_overrides.clear()
+
+
+def test_ops_dispatch_routes_hbm(monkeypatch):
+    """Forced-pallas + forced-hbm: ops.spmm_ell runs the HBM kernel and
+    still matches the oracle."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    monkeypatch.setenv("REPRO_SPMM_VARIANT", "hbm")
+    idx, val, x = _case(60, 6, 333, 16)
+    got = ops.spmm_ell(idx, val, x)
+    want = ref.spmm_ell(idx, val, x)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_full_graph_apply_with_stripe_index(monkeypatch):
+    """GCN full-graph oracle is unchanged when routed through the HBM
+    variant with a pack-time stripe index."""
+    from repro.graph.batching import full_operands
+    from repro.graph.structure import build_graph
+    from repro.nn.gnn_layers import GCN
+
+    rng = np.random.default_rng(0)
+    n, m = 120, 600
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    feats = rng.normal(size=(n, 16)).astype(np.float32)
+    labels = rng.integers(0, 3, n)
+    tr = np.arange(n)
+    g = build_graph(src, dst, n, feats, labels, (tr, tr, tr))
+
+    p = GCN.init(jax.random.PRNGKey(0), g.features.shape[1], 8)
+    x = jnp.asarray(g.features)
+    y_plain = GCN.full_apply(p, x, full_operands(g), jax.nn.relu)
+
+    # now force every spmm through the HBM Pallas kernel (interpret mode)
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    monkeypatch.setenv("REPRO_SPMM_VARIANT", "hbm")
+    ops_hbm = full_operands(g, stripe_index=True, stripe_bb=32, stripe=32)
+    assert isinstance(ops_hbm.stripe_index, StripeIndex)
+    y_hbm = GCN.full_apply(p, x, ops_hbm, jax.nn.relu)
+    assert_allclose(np.asarray(y_hbm), np.asarray(y_plain),
+                    rtol=1e-5, atol=1e-5)
