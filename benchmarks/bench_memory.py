@@ -11,8 +11,6 @@ messages (Table 3's punchline).
 """
 from __future__ import annotations
 
-import os
-
 N = 232_965          # Reddit nodes
 DEG = 49.8           # avg degree
 F0 = 602             # input feature width (Table 6)

@@ -12,8 +12,6 @@ import json
 import os
 import time
 
-import numpy as np
-
 from repro.core.codebook import CodebookConfig
 from repro.graph.batching import inductive_view
 from repro.graph.datasets import (synthetic_arxiv, synthetic_collab,

@@ -3,6 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV.  Scale with REPRO_BENCH_FAST=0
 for the full (paper-sized) grids; default is the fast grid (CPU-friendly).
 
+Machine-readable mode (the CI bench job):
+
+    python -m benchmarks.run kernels --json BENCH_kernels.json --check
+
+runs one suite, writes its structured rows (each {name, us_per_call,
+metrics, tolerance, pass}) as JSON, and with ``--check`` exits non-zero
+when any row with a tolerance is out of tolerance (kernel-vs-oracle parity
+deltas).  Suites expose ``run_structured()`` for this; suites that only
+have ``run()`` are wrapped with pass=True rows.
+
   Table 2  -> bench_complexity
   Table 3  -> bench_memory
   Fig. 4   -> bench_convergence
@@ -19,6 +29,7 @@ state and also keeps wall-time numbers independent.
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -35,9 +46,55 @@ def run_suite_inline(name: str) -> None:
         print(",".join(str(x) for x in row))
 
 
+def run_suite_structured(name: str, json_path: str | None,
+                         check: bool) -> None:
+    import importlib
+    mod = importlib.import_module(f"benchmarks.bench_{name}")
+    if hasattr(mod, "run_structured"):
+        rows = mod.run_structured()
+    else:
+        rows = [{"name": n, "us_per_call": us, "metrics": {"derived": d},
+                 "tolerance": None, "pass": True} for n, us, d in mod.run()]
+    failures = [r["name"] for r in rows if not r.get("pass", True)]
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"suite": name, "rows": rows, "failures": failures},
+                      f, indent=2)
+            f.write("\n")
+    for r in rows:
+        status = "ok" if r.get("pass", True) else "PARITY_FAIL"
+        print(f"{r['name']},{r['us_per_call']},{status}")
+    if failures:
+        sys.stderr.write(
+            f"{len(failures)} row(s) out of tolerance: {failures}\n")
+        if check:
+            raise SystemExit(1)
+
+
 def main() -> None:
-    if len(sys.argv) > 1 and sys.argv[1] in SUITES:
-        run_suite_inline(sys.argv[1])
+    argv = sys.argv[1:]
+    json_path = None
+    check = False
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            raise SystemExit("--json requires a path operand")
+        json_path = argv[i + 1]
+        del argv[i:i + 2]
+    if "--check" in argv:
+        check = True
+        argv.remove("--check")
+    if json_path or check:
+        # gate flags must never fail open: a mistyped suite name has to be
+        # a hard error, not a silent fall-through to the run-all path
+        if len(argv) != 1 or argv[0] not in SUITES:
+            raise SystemExit(
+                f"--json/--check require exactly one suite of {SUITES}, "
+                f"got {argv!r}")
+        run_suite_structured(argv[0], json_path, check)
+        return
+    if argv and argv[0] in SUITES:
+        run_suite_inline(argv[0])
         return
     print("name,us_per_call,derived")
     sys.stdout.flush()

@@ -16,7 +16,6 @@ Input shapes (assigned set; LM shapes are seq_len x global_batch):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

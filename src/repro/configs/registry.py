@@ -1,5 +1,5 @@
 """Architecture registry: --arch <id> -> ArchConfig."""
-from repro.configs.base import ArchConfig, SHAPES
+from repro.configs.base import ArchConfig
 
 from repro.configs import (granite_3_8b, llama3_405b, qwen3_32b, llama3_2_3b,
                            xlstm_350m, qwen3_moe_30b_a3b,

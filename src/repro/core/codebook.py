@@ -15,10 +15,18 @@ Everything here is a pure function on pytrees -> jit/pjit friendly.  At pod
 scale the codebook is replicated and the (counts, sums) statistics of the EMA
 update are all-reduced over the data axis -- identical math to the
 single-device online k-means (see DESIGN.md section 3).
+
+One-pass-per-branch invariant: :func:`update` performs exactly ONE distance
+computation per product-VQ branch per step.  The fused assign+stats kernel
+(``kernels/vq_update.py``, dispatched via ``kops.vq_assign_update``) returns
+the assignment together with the per-codeword (counts, sums) and the per-row
+quantization error, so neither the EMA step, nor dead-codeword revival, nor
+the relative-error monitor recomputes distances or materializes a
+``[n_branches, b, k]`` one-hot.  Anything added to the update path must
+consume these fused outputs rather than re-deriving them.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -56,6 +64,26 @@ class CodebookState(NamedTuple):
     @property
     def f_blk(self) -> int:
         return self.codewords_w.shape[2]
+
+
+class UpdateStats(NamedTuple):
+    """Per-batch byproducts of :func:`update`, emitted by the fused kernel.
+
+    All in *whitened* concat space (the space assignments are made in), so
+    they come for free from the single distance pass -- consumers must not
+    recompute them.
+    """
+
+    assignment: jax.Array   # [n_branches, b] int32  nearest codeword per row
+    qerr: jax.Array         # [n_branches, b]        ||v_w - c_assign||^2
+    vnorm2: jax.Array       # [n_branches, b]        ||v_w||^2
+
+    def relative_error(self) -> jax.Array:
+        """Whitened-space VQ relative error ||V - R V~|| / ||V|| of this
+        batch -- the free training-loop convergence monitor (the Theorem-2
+        feature-half epsilon is :func:`relative_error` below)."""
+        return jnp.sqrt(jnp.sum(self.qerr) /
+                        (jnp.sum(self.vnorm2) + 1e-12))
 
 
 class CodebookConfig(NamedTuple):
@@ -199,10 +227,15 @@ def assign_features_only(state: CodebookState, feats: jax.Array, f_feat: int,
 
 def update(state: CodebookState, feats: jax.Array, grads: jax.Array,
            cfg: CodebookConfig, *,
-           axis_name: Optional[str] = None) -> tuple[CodebookState, jax.Array]:
+           axis_name: Optional[str] = None
+           ) -> tuple[CodebookState, UpdateStats]:
     """One streaming VQ update with a mini-batch of (features || gradients).
 
-    Returns (new_state, assignment [n_branches, b]).
+    Returns (new_state, :class:`UpdateStats`) -- the stats carry the
+    assignment [n_branches, b] plus the per-row quantization error the
+    single fused distance pass emits (module docstring: one-pass-per-branch
+    invariant).  Cluster statistics come fused from the kernel; there is no
+    one-hot / ``[n, b, k]`` einsum on any path.
 
     If ``axis_name`` is given the (counts, sums, batch moments) are psum-ed
     over that mesh axis so that data-parallel replicas learn one codebook.
@@ -233,13 +266,10 @@ def update(state: CodebookState, feats: jax.Array, grads: jax.Array,
         new_mean, new_var = state.mean, state.var
         vw = v
 
-    # --- nearest codeword in whitened space ---
-    assignment = jax.vmap(kops.vq_assign)(vw, state.codewords_w)  # [n, b]
-
-    # --- cluster statistics as one-hot matmuls (MXU friendly, no atomics) ---
-    onehot = jax.nn.one_hot(assignment, cfg.k, dtype=vw.dtype)    # [n, b, k]
-    counts = jnp.sum(onehot, axis=1)                              # [n, k]
-    sums = jnp.einsum('nbk,nbf->nkf', onehot, vw)                 # [n, k, f_blk]
+    # --- fused: nearest codeword + cluster stats + per-row qerr, one
+    # distance pass per branch (kernels/vq_update.py / the scatter oracle) ---
+    assignment, qerr, counts, sums = jax.vmap(kops.vq_assign_update)(
+        vw, state.codewords_w)        # [n, b], [n, b], [n, k], [n, k, f_blk]
     if axis_name is not None:
         counts = jax.lax.psum(counts, axis_name)
         sums = jax.lax.psum(sums, axis_name)
@@ -254,11 +284,10 @@ def update(state: CodebookState, feats: jax.Array, grads: jax.Array,
 
     # --- dead-codeword revival: park starved codewords on the batch rows
     # with the largest quantization error (keeps the codebook fully used;
-    # standard online-k-means practice, deterministic and jit-friendly) ---
+    # standard online-k-means practice, deterministic and jit-friendly).
+    # The ranking consumes the kernel-emitted qerr -- cheap [k]/[b]-shaped
+    # post-processing, no recomputed reconstruction distances ---
     if cfg.revive_threshold > 0:
-        sel = jax.vmap(lambda vv, cc, aa: vv[aa] - cc[aa])(
-            vw, state.codewords_w, assignment)                # [n, b, f_blk]
-        qerr = jnp.sum(sel * sel, axis=-1)                    # [n, b]
         n_rev = min(cfg.k, b)
         _, worst = jax.lax.top_k(qerr, n_rev)                 # [n, n_rev]
         worst_rows = jax.vmap(lambda vv, ww: vv[ww])(vw, worst)
@@ -271,8 +300,10 @@ def update(state: CodebookState, feats: jax.Array, grads: jax.Array,
         new_size = jnp.where(dead, 1.0, new_size)
         new_sum = jnp.where(dead[..., None], repl, new_sum)
 
+    stats = UpdateStats(assignment=assignment, qerr=qerr,
+                        vnorm2=jnp.sum(vw * vw, axis=-1))
     return CodebookState(new_cw, new_size, new_sum, new_mean, new_var,
-                         state.step + 1), assignment
+                         state.step + 1), stats
 
 
 def kmeanspp_init(key: jax.Array, state: CodebookState, feats: jax.Array,
@@ -312,7 +343,11 @@ def relative_error(state: CodebookState, feats: jax.Array, grads: jax.Array,
                    cfg: CodebookConfig) -> jax.Array:
     """VQ relative error  eps = ||X - R X~||_F / ||X||_F  on the feature half.
 
-    This is the epsilon appearing in Theorem 2 / Corollary 3.
+    This is the epsilon appearing in Theorem 2 / Corollary 3 -- an offline
+    oracle (tests, benchmarks): it reconstructs in un-whitened feature space,
+    which costs a gather the training loop never pays.  In-training
+    monitoring uses :meth:`UpdateStats.relative_error`, the whitened-space
+    epsilon the fused update kernel emits for free.
     """
     n = state.n_branches
     xcw = feature_codewords(state, f_feat, cfg)               # [n, k, fb]

@@ -2,7 +2,9 @@
 
 Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
 tiling), with jit'd dispatching wrappers in ops.py and pure-jnp oracles in
-ref.py.  Kernels: vq_assign (fused distance+argmin), spmm_ell (ELLPACK
+ref.py.  Kernels: vq_assign (fused distance+argmin), vq_update (fused
+assign + cluster counts/sums + per-row quantization error -- the one-pass
+streaming codebook update, no one-hot intermediate), spmm_ell (ELLPACK
 message passing, VMEM-resident source), spmm_ell_hbm (ELLPACK message
 passing, HBM-resident source with double-buffered stripe DMA),
 flash_attention (training attention), vq_attention (codebook + window

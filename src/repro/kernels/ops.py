@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.vq_assign import vq_assign_pallas
+from repro.kernels.vq_update import vq_assign_update_pallas
 from repro.kernels.spmm_ell import spmm_ell_pallas
 from repro.kernels.spmm_ell_hbm import StripeIndex, spmm_ell_hbm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -46,6 +47,21 @@ def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
         return vq_assign_pallas(
             x, codewords, interpret=jax.default_backend() != "tpu")
     return ref.vq_assign(x, codewords)
+
+
+def vq_assign_update(x: jax.Array, codewords: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused assign + cluster stats + per-row quantization error.
+
+    The one-pass primitive of the streaming codebook update (Alg. 2):
+    returns (assignment [b], qerr [b], counts [k], sums [k, f]) from a
+    single distance computation.  TPU: kernels/vq_update.py (revisited
+    VMEM accumulator blocks, no one-hot); CPU: scatter-add oracle.
+    """
+    if _use_pallas():
+        return vq_assign_update_pallas(
+            x, codewords, interpret=jax.default_backend() != "tpu")
+    return ref.vq_assign_update(x, codewords)
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,28 @@ def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
     return jnp.argmin(dist, axis=1).astype(jnp.int32)
 
 
+def vq_assign_update(x: jax.Array, codewords: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused assign + cluster stats oracle (kernels/vq_update.py).
+
+    x: [b, f], codewords: [k, f] -> (assignment [b] int32,
+    qerr [b] = ||x - c_assign||^2, counts [k], sums [k, f]).  The stats are
+    scatter-adds keyed by the assignment -- no [b, k] one-hot intermediate,
+    which also makes this the fast CPU execution path of ops.py.
+    """
+    x32 = x.astype(jnp.float32)
+    c32 = codewords.astype(jnp.float32)
+    scores = x32 @ c32.T                                  # [b, k]
+    dist = jnp.sum(c32 * c32, axis=1)[None, :] - 2.0 * scores
+    idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    mind = jnp.take_along_axis(dist, idx[:, None], 1)[:, 0]
+    qerr = jnp.maximum(mind + jnp.sum(x32 * x32, axis=1), 0.0)
+    k = c32.shape[0]
+    counts = jnp.zeros((k,), jnp.float32).at[idx].add(1.0)
+    sums = jnp.zeros((k, x32.shape[1]), jnp.float32).at[idx].add(x32)
+    return idx, qerr, counts, sums
+
+
 def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array) -> jax.Array:
     """Padded-neighbor (ELLPACK) sparse @ dense.
 

@@ -26,6 +26,32 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def pad_assign_operands(x: jax.Array, codewords: jax.Array,
+                        bb: int, kb: int):
+    """Clamp tile sizes and pad operands for the shared assign-grid layout
+    (used by vq_assign and the fused vq_update kernel -- one place owns the
+    padding invariants): b -> bb multiple, k -> kb multiple, f -> lane-width
+    multiple of 128 with zeros (leaves distances unchanged).  Padded
+    codeword rows get value 1e15 so they never win the argmin.
+
+    Returns (xp, cp, bb, kb, bp, kp, fp) with bb/kb clamped to the actual
+    problem size (floor 8, the f32 sublane width).
+    """
+    b, f = x.shape
+    k = codewords.shape[0]
+    bb = min(bb, max(8, b))
+    kb = min(kb, max(8, k))
+
+    def rup(v, m):
+        return (v + m - 1) // m * m
+
+    bp, kp, fp = rup(b, bb), rup(k, kb), rup(f, 128)
+    xp = jnp.zeros((bp, fp), x.dtype).at[:b, :f].set(x)
+    cp = jnp.full((kp, fp), 1e15, jnp.float32).at[:k, :f].set(
+        codewords.astype(jnp.float32)).at[:k, f:].set(0.0)
+    return xp, cp, bb, kb, bp, kp, fp
+
+
 def _vq_assign_kernel(x_ref, c_ref, val_ref, idx_ref, *, kb: int):
     ki = pl.program_id(1)
     x = x_ref[...].astype(jnp.float32)                    # [bb, f]
@@ -52,28 +78,26 @@ def _vq_assign_kernel(x_ref, c_ref, val_ref, idx_ref, *, kb: int):
         idx_ref[...] = jnp.where(take, tile_arg, idx_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("bb", "kb", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "kb", "interpret", "want_min"))
 def vq_assign_pallas(x: jax.Array, codewords: jax.Array, *,
                      bb: int = 256, kb: int = 512,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool = False, want_min: bool = False):
     """x: [b, f], codewords: [k, f] -> assignment [b] int32.
+
+    With ``want_min=True`` also returns the squared distance to the chosen
+    codeword, [b] f32 (the carried running min plus the per-row |x|^2 the
+    kernel factors out) -- callers that need the quantization error get it
+    without a second distance pass.
+
+    ``interpret`` defaults to False so a bare call on TPU compiles; the
+    interpret-mode test/CI sweeps pass it explicitly.
 
     Handles all padding internally (b -> bb multiple, k -> kb multiple,
     f -> multiple of 128 with zeros, which leaves distances unchanged).
     """
-    b, f = x.shape
-    k = codewords.shape[0]
-    bb = min(bb, max(8, b))
-    kb = min(kb, max(8, k))
-
-    def rup(v, m):
-        return (v + m - 1) // m * m
-
-    bp, kp, fp = rup(b, bb), rup(k, kb), rup(f, 128)
-    xp = jnp.zeros((bp, fp), x.dtype).at[:b, :f].set(x)
-    # padded codewords sit far away -> never selected
-    cp = jnp.full((kp, fp), 1e15, jnp.float32).at[:k, :f].set(
-        codewords.astype(jnp.float32)).at[:k, f:].set(0.0)
+    b, _ = x.shape
+    xp, cp, bb, kb, bp, kp, fp = pad_assign_operands(x, codewords, bb, kb)
 
     grid = (bp // bb, kp // kb)
     val, idx = pl.pallas_call(
@@ -93,5 +117,7 @@ def vq_assign_pallas(x: jax.Array, codewords: jax.Array, *,
         ],
         interpret=interpret,
     )(xp, cp)
-    del val
-    return idx[:b, 0]
+    if not want_min:
+        return idx[:b, 0]
+    xn2 = jnp.sum(x.astype(jnp.float32) ** 2, axis=1)
+    return idx[:b, 0], jnp.maximum(val[:b, 0] + xn2, 0.0)

@@ -8,7 +8,6 @@ STUBS per the assignment spec: [audio] gets precomputed frame embeddings,
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -16,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, ArchConfig
 from repro.models import lm
-from repro.train.loop import TrainState, make_train_step
+from repro.train.loop import TrainState
 from repro.train.optimizer import adam
 
 

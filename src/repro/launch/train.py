@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import ARCHS, SMOKES
 from repro.data.tokens import TokenStreamConfig, batch_shard

@@ -221,19 +221,23 @@ def vq_train_step(params, vq_states, opt_state, pack: MinibatchPack,
     new_params, new_opt = opt.update(gparams, opt_state, params)
 
     # ---- Alg. 1 line 15-16: VQ update + assignment synchronization ----
+    # cbm.update is fused (one distance pass per branch, codebook.py module
+    # docstring); its UpdateStats also hands back the whitened-space VQ
+    # relative error per layer, surfaced to the trainer as a free monitor.
     cb_cfg = cfg.layer_codebook_cfg()
-    new_states = []
+    new_states, vq_errs = [], []
     for l, vq in enumerate(vq_states):
         feats = acts[l].astype(jnp.float32)
         grads = gprobes[l].reshape(pack.b, -1).astype(jnp.float32)
         # scale gradients to O(1) for stable codebook geometry; whitening
         # makes the codebook invariant to this, it only guards fp range
-        new_cb, assign = cbm.update(vq.codebook, feats, grads, cb_cfg)
+        new_cb, stats = cbm.update(vq.codebook, feats, grads, cb_cfg)
         new_states.append(refresh_assignment(
             LayerVQState(new_cb, vq.assignment, vq.counts),
-            pack.batch_ids, assign))
+            pack.batch_ids, stats.assignment))
+        vq_errs.append(stats.relative_error())
 
-    return new_params, new_states, new_opt, loss, out
+    return new_params, new_states, new_opt, loss, out, jnp.stack(vq_errs)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

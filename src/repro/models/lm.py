@@ -18,25 +18,22 @@ same interface -- sub-quadratic train/prefill and O(k+W) decode.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.distributed.act_constraints import constrain_tokens
-from repro.nn.attention import (AttnParams, KVCache, decode_attend, gqa_attend,
+from repro.nn.attention import (AttnParams, decode_attend, gqa_attend,
                                 init_attn, init_kv_cache, qkv)
-from repro.nn.ffn import (MLPParams, MoEParams, apply_mlp, apply_moe,
-                          init_mlp, init_moe)
-from repro.nn.layers import dense_init, embed_init, rmsnorm, rope
-from repro.nn.ssm import (Mamba2Params, Mamba2State, apply_mamba2_step,
-                          apply_mamba2_train, init_mamba2, init_mamba2_state)
-from repro.nn.vq_attention import (VQAttnConfig, VQKVCache, init_vq_cache,
+from repro.nn.ffn import apply_mlp, apply_moe, init_mlp, init_moe
+from repro.nn.layers import dense_init, embed_init, rmsnorm
+from repro.nn.ssm import (apply_mamba2_step, apply_mamba2_train,
+                          init_mamba2, init_mamba2_state)
+from repro.nn.vq_attention import (VQAttnConfig, init_vq_cache,
                                    vq_attention_decode, vq_attention_train)
-from repro.nn.xlstm import (MLSTMParams, MLSTMState, SLSTMParams, SLSTMState,
-                            apply_mlstm_step, apply_mlstm_train,
+from repro.nn.xlstm import (apply_mlstm_step, apply_mlstm_train,
                             apply_slstm_step, apply_slstm_train, init_mlstm,
                             init_mlstm_state, init_slstm, init_slstm_state)
 

@@ -15,7 +15,7 @@ cannot handle at all, paper Sec. 1/3).
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +25,7 @@ from repro.core.codebook import CodebookConfig
 from repro.core.conv import (LayerVQState, MinibatchPack, fixed_conv_operands,
                              out_of_batch_cluster_mass)
 from repro.core.message_passing import (approx_message_passing,
-                                        inject_context_grad, intra_messages,
-                                        reconstruct)
+                                        inject_context_grad, reconstruct)
 from repro.graph.batching import FullGraphOperands
 from repro.kernels import ops as kops
 

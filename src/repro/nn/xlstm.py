@@ -23,7 +23,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.nn.layers import dense_init, rmsnorm
+from repro.nn.layers import dense_init
 
 
 # ---------------------------------------------------------------------------

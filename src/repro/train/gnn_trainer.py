@@ -20,17 +20,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codebook as cbm
-from repro.core.codebook import CodebookConfig
 from repro.graph.batching import (full_operands, make_pack, minibatch_stream,
                                   subgraph_operands)
 from repro.graph.sampling import (cluster_gcn_batches, graphsaint_rw_batches,
                                   ns_sage_batches, partition_graph)
 from repro.graph.structure import Graph
-from repro.models.gnn import (GNNConfig, full_forward, full_predict,
-                              full_train_step, hits_at_k, init_gnn,
-                              init_vq_states, link_loss, node_loss,
-                              node_metric, probe_shapes, vq_eval_batch,
-                              vq_forward, vq_train_step)
+from repro.models.gnn import (GNNConfig, full_predict, full_train_step,
+                              hits_at_k, init_gnn, init_vq_states,
+                              node_metric, vq_train_step)
 from repro.train.optimizer import adam, rmsprop
 
 
@@ -139,6 +136,7 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
         g.train_edges.tolist())} if cfg.task == "link" else None
 
     hist, t0 = [], time.time()
+    vq_errs = None
     for ep in range(epochs):
         for pack in minibatch_stream(g, batch_size, rng, deg_cap=deg_cap):
             bidx = np.asarray(pack.batch_ids)
@@ -157,11 +155,16 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
                           "neg_pairs": jnp.asarray(neg)}
             else:
                 kwargs = {"loss_mask": jnp.asarray(train_mask[bidx])}
-            params, vq, ost, loss, _ = vq_train_step(
+            params, vq, ost, loss, _, vq_errs = vq_train_step(
                 params, vq, ost, pack, x[bidx], labels[bidx], ops.degrees,
                 cfg, opt, **kwargs)
         if (ep + 1) % eval_every == 0 or ep == epochs - 1:
             m = _evaluate(params, g, cfg, x, ops)
+            # whitened-space VQ relative error of the last batch, emitted by
+            # the fused update kernel (no extra distance computation); stays
+            # unset when the stream yielded no batch (batch_size > n)
+            if vq_errs is not None:
+                m["vq_err"] = float(jnp.mean(vq_errs))
             hist.append({"epoch": ep + 1, "time": time.time() - t0, **m})
     deg = deg_cap or g.max_degree()
     return {"history": hist, "final": hist[-1], "params": params,

@@ -13,13 +13,11 @@ The loop is deliberately dumb-robust (1000+-node posture):
 """
 from __future__ import annotations
 
-import functools
 import time
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.data.tokens import TokenStreamConfig, batch_shard

@@ -11,7 +11,6 @@ see repro/distributed/sharding.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.registry import ARCHS, SMOKES, get_smoke
+from repro.configs.registry import ARCHS, get_smoke
 from repro.models.lm import (init_lm, init_serve_cache, prefill, serve_step,
                              train_loss)
 

@@ -7,8 +7,7 @@ from numpy.testing import assert_allclose
 
 from repro.core import codebook as cbm
 from repro.core.codebook import CodebookConfig, CodebookState, branch_layout
-from repro.core.conv import LayerVQState, init_layer_vq_state, \
-    refresh_assignment
+from repro.core.conv import LayerVQState, refresh_assignment
 from repro.graph.batching import full_operands, make_pack
 from repro.graph.datasets import synthetic_arxiv
 from repro.models.gnn import (GNNConfig, full_forward, init_gnn,
@@ -45,13 +44,18 @@ def test_codebook_update_reduces_error():
         jax.random.PRNGKey(3), (256, 16))
 
     state = cbm.init_codebook(key, 16, 16, cfg)
-    errs = []
+    errs, werrs = [], []
     for _ in range(30):
-        state, assign = cbm.update(state, feats, grads, cfg)
-        errs.append(float(cbm.relative_error(state, feats, grads, assign,
-                                             16, cfg)))
+        state, stats = cbm.update(state, feats, grads, cfg)
+        errs.append(float(cbm.relative_error(state, feats, grads,
+                                             stats.assignment, 16, cfg)))
+        werrs.append(float(stats.relative_error()))
     assert errs[-1] < 0.75 * errs[0]   # converges from the seeded start
     assert errs[-1] < 0.4              # well below the random-assign ~1.0
+    # the free fused monitor (whitened space) must converge alongside the
+    # Theorem-2 oracle
+    assert werrs[-1] < 0.75 * werrs[0]
+    assert werrs[-1] < 0.4
 
 
 def test_dead_codeword_revival():
@@ -63,8 +67,8 @@ def test_dead_codeword_revival():
     feats = jax.random.normal(key, (64, 8))
     grads = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
     for _ in range(10):
-        state, assign = cbm.update(state, feats, grads, cfg)
-    used = len(np.unique(np.asarray(assign[0])))
+        state, stats = cbm.update(state, feats, grads, cfg)
+    used = len(np.unique(np.asarray(stats.assignment[0])))
     assert used > 4   # revival spread assignments over several codewords
 
 
@@ -76,10 +80,10 @@ def test_whitening_scale_invariance():
     feats = jax.random.normal(key, (128, 8))
     grads = 1e3 * jax.random.normal(jax.random.PRNGKey(1), (128, 8))
     s1 = cbm.init_codebook(key, 8, 8, cfg)
-    s1, a1 = cbm.update(s1, feats, grads, cfg)
+    s1, st1 = cbm.update(s1, feats, grads, cfg)
     s2 = cbm.init_codebook(key, 8, 8, cfg)
-    s2, a2 = cbm.update(s2, feats, grads / 1e3, cfg)
-    agree = float((a1 == a2).mean())
+    s2, st2 = cbm.update(s2, feats, grads / 1e3, cfg)
+    agree = float((st1.assignment == st2.assignment).mean())
     assert agree > 0.9
 
 

@@ -49,7 +49,6 @@ def test_compressed_allreduce_error_feedback():
 @pytest.mark.parametrize("arch", ["granite-3-8b", "qwen3-moe-30b-a3b",
                                   "llama3.2-3b", "whisper-tiny"])
 def test_strategy_selection(arch):
-    from repro.launch.mesh import make_host_mesh
     from repro.distributed.sharding import strategy_for
     # strategy choice is a pure function of the full config + mesh shape;
     # evaluate against a mock 16-way-model mesh via the production rules

@@ -54,7 +54,6 @@ def test_mlstm_chunked_equals_unchunked():
     d, h, b = 32, 4, 1
     p = init_mlstm(jax.random.PRNGKey(0), d, h)
     # s > chunk and divisible -> chunked path; compare vs tiny-s direct path
-    import repro.nn.xlstm as xl
     x = jax.random.normal(jax.random.PRNGKey(1), (b, 2048, d))
     y_chunked = apply_mlstm_train(p, x, h)          # chunk=1024 -> scan path
     # stepwise oracle on a prefix
@@ -73,7 +72,6 @@ def test_slstm_train_equals_stepwise():
     p = init_slstm(jax.random.PRNGKey(0), d)
     x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d))
     y_par = apply_slstm_train(p, x)
-    from repro.nn.xlstm import _slstm_cell
     st = init_slstm_state(b, d)
     outs = []
     for t in range(s):

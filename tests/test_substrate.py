@@ -16,7 +16,7 @@ except ImportError:
 
 from repro.core import bounds
 from repro.data.tokens import TokenStreamConfig, batch_shard
-from repro.graph.batching import full_operands, inductive_view, make_pack
+from repro.graph.batching import inductive_view, make_pack
 from repro.graph.datasets import DATASETS, synthetic_arxiv, synthetic_ppi
 from repro.graph.sampling import (cluster_gcn_batches, graphsaint_rw_batches,
                                   ns_sage_batches, partition_graph)

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from numpy.testing import assert_allclose
 
 from repro.kernels import ref
