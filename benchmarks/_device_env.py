@@ -1,0 +1,9 @@
+"""Side-effect module: force two virtual CPU devices for the epoch bench.
+
+Must be imported BEFORE the first jax import (XLA reads XLA_FLAGS at
+backend init); kept as its own module so bench_epoch's imports stay at the
+top of the file.  A no-op when the operator already set XLA_FLAGS.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")

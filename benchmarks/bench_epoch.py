@@ -1,0 +1,168 @@
+"""Epoch-executor throughput bench (DESIGN.md section 9): host-driven
+per-step loop vs the device-resident ``lax.scan`` executor vs the
+``shard_map`` data-parallel executor, in steps/s on the synthetic
+benchmark graph.
+
+Two entry points (the ``benchmarks/run.py`` convention):
+
+  run_structured() -> rows for BENCH_epoch.json.  The dispatch-bound shape
+      (small batch: per-step overhead dominates) carries a THROUGHPUT GATE:
+      the scan executor must be >= 2x the host loop's steps/s
+      (``scan_over_loop <= 0.5``; ISSUE 3 acceptance).  The compute-bound
+      shape (large batch) is reported ungated -- there the two paths
+      necessarily converge because model compute dominates.
+  run() -> legacy (name, us, derived) tuples for the CSV printer.
+
+The 2-device ``shard_map`` row needs >= 2 devices, so this module forces
+two virtual CPU devices BEFORE the first jax import (each bench suite runs
+in its own subprocess); if jax was already initialized with one device the
+row is skipped rather than mis-measured.
+"""
+from __future__ import annotations
+
+import benchmarks._device_env  # noqa: F401  (sets XLA_FLAGS; precedes jax)
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_kernels import _entry
+from repro.core.codebook import CodebookConfig
+from repro.graph.batching import (build_epoch_plan, epoch_slices,
+                                  full_operands, minibatch_stream)
+from repro.graph.datasets import synthetic_arxiv
+from repro.models.gnn import (GNNConfig, init_gnn, init_vq_states,
+                              vq_train_epoch, vq_train_step)
+from repro.train.optimizer import rmsprop
+
+_GATE = {"scan_over_loop": 0.5}   # scan must be >= 2x the host loop
+
+
+class _Env:
+    """One benchmark configuration: graph, model, plan, fresh state."""
+
+    def __init__(self, n: int, batch: int, hidden: int, k: int):
+        self.g = synthetic_arxiv(n=n, seed=0)
+        self.batch = batch
+        self.cfg = GNNConfig(backbone="gcn", f_in=self.g.f, hidden=hidden,
+                             n_out=self.g.num_classes, n_layers=2,
+                             codebook=CodebookConfig(k=k, f_prod=4))
+        self.ops = full_operands(self.g)
+        self.x = jnp.asarray(self.g.features)
+        self.labels = jnp.asarray(self.g.labels)
+        tm = np.zeros(self.g.n, np.float32)
+        tm[self.g.train_idx] = 1.0
+        self.train_mask_np = tm
+        self.train_mask = jnp.asarray(tm)
+        self.opt = rmsprop(3e-3)
+        self.plan = build_epoch_plan(self.g)
+        self.steps = -(-self.g.n // batch)
+
+    def fresh(self):
+        params = init_gnn(jax.random.PRNGKey(0), self.cfg)
+        vq = init_vq_states(jax.random.PRNGKey(1), self.cfg, self.g.n)
+        return [params, vq, self.opt.init(params)]
+
+
+def _time_epochs(run_epoch, reps: int = 3) -> float:
+    """Best-of-reps wall seconds per epoch, after one warmup (compile)."""
+    run_epoch()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        run_epoch()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def _host_loop_epoch_s(env: _Env) -> float:
+    rng = np.random.default_rng(0)
+    st = env.fresh()
+
+    def epoch():
+        loss = None
+        for pack in minibatch_stream(env.g, env.batch, rng):
+            bidx = np.asarray(pack.batch_ids)
+            lm = env.train_mask_np[bidx] * np.asarray(pack.slot_mask)
+            st[0], st[1], st[2], loss, _, _ = vq_train_step(
+                st[0], st[1], st[2], pack, env.x[bidx], env.labels[bidx],
+                env.ops.degrees, env.cfg, env.opt,
+                loss_mask=jnp.asarray(lm))
+        jax.block_until_ready(loss)
+    return _time_epochs(epoch)
+
+
+def _scan_epoch_s(env: _Env) -> float:
+    rng = np.random.default_rng(0)
+    st = env.fresh()
+
+    def epoch():
+        ids, sm = epoch_slices(rng.permutation(np.arange(env.g.n)),
+                               env.batch)
+        st[0], st[1], st[2], losses, _ = vq_train_epoch(
+            st[0], st[1], st[2], env.plan,
+            jnp.asarray(ids.astype(np.int32)), jnp.asarray(sm), env.x,
+            env.labels, env.train_mask, env.ops.degrees, env.cfg, env.opt)
+        jax.block_until_ready(losses)
+    return _time_epochs(epoch)
+
+
+def _scan_dp_epoch_s(env: _Env, n_devices: int) -> float:
+    from repro.distributed.data_parallel import (graph_dp_mesh,
+                                                 vq_train_epoch_dp)
+    mesh = graph_dp_mesh(n_devices)
+    rng = np.random.default_rng(0)
+    st = env.fresh()
+
+    def epoch():
+        ids, sm = epoch_slices(rng.permutation(np.arange(env.g.n)),
+                               env.batch)
+        st[0], st[1], st[2], losses, _ = vq_train_epoch_dp(
+            mesh, st[0], st[1], st[2], env.plan,
+            jnp.asarray(ids.astype(np.int32)), jnp.asarray(sm), env.x,
+            env.labels, env.train_mask, env.ops.degrees, env.cfg, env.opt)
+        jax.block_until_ready(losses)
+    return _time_epochs(epoch)
+
+
+def run_structured() -> list[dict]:
+    fast = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
+    # (n, batch, hidden, k, gated): gate only the dispatch-bound shape
+    grids = [(2048, 32, 32, 32, True), (2048, 256, 32, 32, False)]
+    if not fast:
+        grids.append((8192, 128, 64, 64, False))
+
+    rows: list[dict] = []
+    gated_env = None
+    for n, batch, hidden, k, gated in grids:
+        env = _Env(n, batch, hidden, k)
+        if gated:
+            gated_env = env
+        t_loop = _host_loop_epoch_s(env)
+        t_scan = _scan_epoch_s(env)
+        tag = f"n{n}_b{batch}"
+        _entry(rows, f"epoch/host_loop_{tag}", t_loop * 1e6,
+               {"steps_per_s": env.steps / t_loop})
+        _entry(rows, f"epoch/scan_{tag}", t_scan * 1e6,
+               {"steps_per_s": env.steps / t_scan,
+                "speedup": t_loop / t_scan,
+                "scan_over_loop": t_scan / t_loop},
+               tolerance=_GATE if gated else None)
+
+    if len(jax.devices()) >= 2 and gated_env is not None:
+        t_dp = _scan_dp_epoch_s(gated_env, 2)
+        _entry(rows, "epoch/scan_dp2_n2048_b32", t_dp * 1e6,
+               {"steps_per_s": gated_env.steps / t_dp})
+    return rows
+
+
+def run() -> list[tuple]:
+    out = []
+    for e in run_structured():
+        out.append((e["name"], f"{e['us_per_call']:.0f}",
+                    ";".join(f"{k}={v:.3g}"
+                             for k, v in e["metrics"].items())))
+    return out

@@ -21,6 +21,7 @@ have ``run()`` are wrapped with pass=True rows.
   App. G   -> bench_ablation
   (ours)   -> bench_roofline (from the multi-pod dry-run artifacts)
   (ours)   -> bench_kernels (Pallas kernels, interpret mode, vs oracles)
+  (ours)   -> bench_epoch (epoch executor: host loop vs scan vs shard_map)
 
 Each suite runs in its own subprocess: a single long-lived process
 accumulating hundreds of distinct jit executables eventually trips XLA's
@@ -35,8 +36,8 @@ import subprocess
 import sys
 import time
 
-SUITES = ["complexity", "memory", "kernels", "roofline", "inference",
-          "convergence", "ablation", "performance"]
+SUITES = ["complexity", "memory", "kernels", "epoch", "roofline",
+          "inference", "convergence", "ablation", "performance"]
 
 
 def run_suite_inline(name: str) -> None:

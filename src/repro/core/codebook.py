@@ -286,11 +286,20 @@ def update(state: CodebookState, feats: jax.Array, grads: jax.Array,
     # with the largest quantization error (keeps the codebook fully used;
     # standard online-k-means practice, deterministic and jit-friendly).
     # The ranking consumes the kernel-emitted qerr -- cheap [k]/[b]-shaped
-    # post-processing, no recomputed reconstruction distances ---
+    # post-processing, no recomputed reconstruction distances.  Under data
+    # parallelism the candidate rows are all-gathered first: the dead mask
+    # is replica-identical (psum'd sizes), so picking from replica-LOCAL
+    # rows would silently write different replacement codewords on every
+    # device and diverge the "replicated" codebooks ---
     if cfg.revive_threshold > 0:
-        n_rev = min(cfg.k, b)
-        _, worst = jax.lax.top_k(qerr, n_rev)                 # [n, n_rev]
-        worst_rows = jax.vmap(lambda vv, ww: vv[ww])(vw, worst)
+        vw_rev, qerr_rev = vw, qerr
+        if axis_name is not None:
+            vw_rev = jax.lax.all_gather(vw, axis_name, axis=1, tiled=True)
+            qerr_rev = jax.lax.all_gather(qerr, axis_name, axis=1,
+                                          tiled=True)
+        n_rev = min(cfg.k, qerr_rev.shape[-1])
+        _, worst = jax.lax.top_k(qerr_rev, n_rev)             # [n, n_rev]
+        worst_rows = jax.vmap(lambda vv, ww: vv[ww])(vw_rev, worst)
         dead = new_size < cfg.revive_threshold                # [n, k]
         # rank dead codewords so each picks a distinct worst row
         rank = jnp.cumsum(dead.astype(jnp.int32), axis=1) - 1

@@ -32,6 +32,9 @@ class MinibatchPack(NamedTuple):
     ``stripe_index`` (optional, built by the packer) is the tile->stripes
     scalar-prefetch metadata for the intra-batch term's HBM SpMM variant,
     used when b * f exceeds the VMEM envelope (DESIGN.md section 3).
+    ``slot_mask`` (optional, [b]) is 0 on the wrap-padded slots of a tail
+    batch -- those rows are real (wrapped) nodes whose messages stay valid,
+    but the loss must skip them (DESIGN.md section 9).
     """
     batch_ids: jax.Array   # [b]      global node ids
     nbr_ids: jax.Array     # [b, D]   in-neighbor global ids (0 on padding)
@@ -41,6 +44,7 @@ class MinibatchPack(NamedTuple):
     rev_mask: jax.Array    # [b, Dr]
     rev_pos: jax.Array     # [b, Dr]
     stripe_index: Optional[StripeIndex] = None
+    slot_mask: Optional[jax.Array] = None
 
     @property
     def b(self) -> int:
@@ -70,9 +74,10 @@ def refresh_assignment(state: LayerVQState, batch_ids: jax.Array,
 def init_layer_vq_state(key: jax.Array, n_nodes: int, f_feat: int,
                         f_grad: int, cfg: CodebookConfig) -> LayerVQState:
     from repro.core.codebook import init_codebook
-    cb = init_codebook(key, f_feat, f_grad, cfg)
+    k_cb, k_assign = jax.random.split(key)
+    cb = init_codebook(k_cb, f_feat, f_grad, cfg)
     assignment = jax.random.randint(
-        key, (cb.n_branches, n_nodes), 0, cfg.k).astype(jnp.int32)
+        k_assign, (cb.n_branches, n_nodes), 0, cfg.k).astype(jnp.int32)
     counts = jax.vmap(
         lambda a: jnp.zeros((cfg.k,)).at[a].add(1.0))(assignment)
     return LayerVQState(cb, assignment, counts)

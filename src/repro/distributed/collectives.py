@@ -18,6 +18,15 @@ import jax.numpy as jnp
 PyTree = Any
 
 
+def psum_tree(tree: PyTree, axis_name: str) -> PyTree:
+    """Leaf-wise uncompressed psum -- the exact all-reduce of the VQ epoch
+    executor's data parallelism (param grads and codebook statistics must
+    stay bit-consistent across replicas so the codebooks and assignment
+    tables never diverge; the int8 path below is for cross-pod links)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.lax.psum(x, axis_name), tree)
+
+
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127

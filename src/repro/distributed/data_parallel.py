@@ -1,0 +1,80 @@
+"""shard_map data parallelism for the VQ epoch executor (DESIGN.md sec. 9).
+
+Shards the BATCH axis of the stacked epoch arrays over the 1-axis "data"
+mesh: each device runs the full ``lax.scan`` over the S steps on its b/ndev
+rows of every batch, treating its rows as a VQ mini-batch of their own
+(cross-device in-batch neighbors ride the codeword context, exactly the
+paper's out-of-batch approximation).  The per-replica body IS
+``models.gnn._vq_epoch_body`` -- the same implementation the single-device
+executor jits -- with ``axis_name="data"``, which turns on three
+collectives per step:
+
+  * param grads          -- ``collectives.psum_tree`` (uncompressed; exact),
+  * codebook statistics  -- the fused ``vq_assign_update`` (counts, sums)
+    and the whitening batch moments, psum'd INSIDE ``codebook.update`` via
+    its ``axis_name`` hook, so every replica computes the same EMA step as
+    a single device seeing the pooled batch;
+  * assignment sync      -- each device's refreshed rows are all-gathered
+    and scattered into the (replicated) global assignment table, so tables
+    never diverge.
+
+The ndev=1 instantiation is numerically identical to
+``models.gnn.vq_train_epoch``; the multi-device run is identical to the
+same body under ``jax.vmap(axis_name=...)`` over the sub-batch axis (the
+parity oracles in tests/test_epoch_executor.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import epoch_batch_spec, graph_dp_mesh
+from repro.graph.batching import EpochPlan
+from repro.models.gnn import GNNConfig, _vq_epoch_body
+from repro.train.optimizer import Optimizer
+
+__all__ = ["graph_dp_mesh", "vq_train_epoch_dp"]
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "cfg", "opt"),
+                   donate_argnums=(0, 1, 2))
+def _dp_epoch_jit(params, vq_states, opt_state, plan, perm, slot_mask,
+                  x, labels, train_mask, degrees, *, mesh: Mesh,
+                  cfg: GNNConfig, opt: Optimizer):
+    # the shard_map wrapper is rebuilt per trace (cheap); caching lives in
+    # jit's executable cache keyed on the static (mesh, cfg, opt) -- the
+    # same convention as vq_train_step's static opt, and no extra
+    # permanently-retained closure cache
+    body = functools.partial(_vq_epoch_body, cfg=cfg, opt=opt,
+                             axis_name="data")
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), epoch_batch_spec(),
+                  epoch_batch_spec(), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
+        check_rep=False)
+    return sharded(params, vq_states, opt_state, plan, perm, slot_mask,
+                   x, labels, train_mask, degrees)
+
+
+def vq_train_epoch_dp(mesh: Mesh, params, vq_states, opt_state,
+                      plan: EpochPlan, perm, slot_mask, x, labels,
+                      train_mask, degrees, cfg: GNNConfig, opt: Optimizer):
+    """Data-parallel ``vq_train_epoch``: one jit'd shard_map call per epoch.
+
+    Same signature/returns as the single-device executor plus the leading
+    ``mesh`` (1-axis "data", e.g. ``graph_dp_mesh()``); the batch axis of
+    ``perm``/``slot_mask`` [S, b] must divide by the mesh size.
+    """
+    nd = mesh.shape["data"]
+    if perm.shape[1] % nd != 0:
+        raise ValueError(
+            f"batch size {perm.shape[1]} not divisible by the data mesh "
+            f"size {nd}")
+    return _dp_epoch_jit(params, vq_states, opt_state, plan, perm,
+                         slot_mask, x, labels, train_mask, degrees,
+                         mesh=mesh, cfg=cfg, opt=opt)

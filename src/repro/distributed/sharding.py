@@ -21,6 +21,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
@@ -284,3 +285,28 @@ def cache_shardings(cache: Any, cfg: ArchConfig, mesh: Mesh, batch: int,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# GNN epoch-executor data parallelism (DESIGN.md section 9)
+# ---------------------------------------------------------------------------
+
+def graph_dp_mesh(n_devices: int | None = None) -> Mesh:
+    """1-axis "data" mesh for the VQ epoch executor's shard_map data
+    parallelism (params/codebooks replicated, batch axis sharded).
+    Raises when fewer devices exist than requested -- an explicit
+    parallelism ask must never silently under-provision."""
+    devs = jax.devices()
+    if n_devices is not None:
+        if len(devs) < n_devices:
+            raise ValueError(
+                f"requested a {n_devices}-device data mesh but only "
+                f"{len(devs)} device(s) exist")
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), ("data",))
+
+
+def epoch_batch_spec() -> P:
+    """PartitionSpec of the stacked [S, b] epoch arrays (perm / slot mask):
+    scan axis replicated, batch axis split over "data"."""
+    return P(None, "data")

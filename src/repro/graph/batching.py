@@ -4,6 +4,13 @@ The packer is the only host<->device seam of the graph path: it ships, per
 mini-batch, Theta(b * D) integers/floats -- batch features, padded neighbor
 ids, in-batch positions -- never O(n).  At pod scale this runs per-host on
 its data shard; here it is a numpy routine feeding jit'd steps.
+
+Epoch executor (DESIGN.md section 9): :func:`build_epoch_plan` packs the
+WHOLE graph once into device-resident per-node neighbor tables; after that
+every epoch's S stacked [S, b, D] batches are derived *in-jit* from a node
+permutation by :func:`plan_batch` (gather rows + recompute in-batch
+positions with a node->slot scatter), so the training loop never returns to
+host-side packing.
 """
 from __future__ import annotations
 
@@ -18,17 +25,29 @@ from repro.kernels.spmm_ell_hbm import StripeIndex, clamp_tiles
 
 
 def _pack_rows(csr: CSR, ids: np.ndarray, deg_cap: int,
-               inv: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+               inv: np.ndarray | None = None
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray | None]:
+    """Padded (ELLPACK) neighbor rows for ``ids`` -- fully vectorized CSR
+    slicing (one fancy-gather over ``csr.indices``, no per-row Python loop:
+    the per-batch host cost is a handful of numpy kernels regardless of b).
+    ``inv`` (node -> in-batch position, -1 elsewhere) is optional: callers
+    that do not need positions -- or recompute them in-jit, like
+    ``build_epoch_plan`` -- pass None and skip that [b, D] gather."""
+    ids = np.asarray(ids, np.int64)
     b = len(ids)
-    nbr = np.zeros((b, deg_cap), np.int32)
-    mask = np.zeros((b, deg_cap), np.float32)
-    pos = np.full((b, deg_cap), -1, np.int32)
-    for r, i in enumerate(ids):
-        ns = csr.neighbors(i)[:deg_cap]
-        d = len(ns)
-        nbr[r, :d] = ns
-        mask[r, :d] = 1.0
-        pos[r, :d] = inv[ns]
+    starts = csr.indptr[ids]                                  # [b]
+    degs = np.minimum(csr.indptr[ids + 1] - starts, deg_cap)  # [b]
+    offs = np.arange(deg_cap, dtype=np.int64)[None, :]        # [1, D]
+    valid = offs < degs[:, None]                              # [b, D]
+    if csr.m == 0:
+        nbr = np.zeros((b, deg_cap), np.int32)
+    else:
+        nbr = csr.indices[np.where(valid, starts[:, None] + offs, 0)
+                          ].astype(np.int32)
+        nbr[~valid] = 0
+    mask = valid.astype(np.float32)
+    pos = None if inv is None else \
+        np.where(valid, inv[nbr], np.int32(-1)).astype(np.int32)
     return nbr, mask, pos
 
 
@@ -82,10 +101,13 @@ def make_stripe_index(nbr_idx: np.ndarray, n_src: int, *,
 
 def make_pack(g: Graph, batch_ids: np.ndarray, deg_cap: int | None = None,
               *, stripe_index: bool = False, stripe_bb: int = 128,
-              stripe: int = 512) -> MinibatchPack:
+              stripe: int = 512,
+              slot_mask: np.ndarray | None = None) -> MinibatchPack:
     """Pack a mini-batch; with ``stripe_index=True`` also emit the
     tile->stripes metadata the HBM SpMM kernel's scalar prefetch needs for
-    the intra-batch term (source rows = batch positions)."""
+    the intra-batch term (source rows = batch positions).  ``slot_mask``
+    (optional, [b]) marks padding slots of a wrap-padded tail batch with 0
+    so the loss skips them (:func:`epoch_slices`)."""
     deg_cap = deg_cap or g.max_degree()
     inv = np.full(g.n, -1, np.int32)
     inv[batch_ids] = np.arange(len(batch_ids), dtype=np.int32)
@@ -103,7 +125,9 @@ def make_pack(g: Graph, batch_ids: np.ndarray, deg_cap: int | None = None,
         nbr_ids=jnp.asarray(nbr), nbr_mask=jnp.asarray(nmask),
         nbr_pos=jnp.asarray(npos),
         rev_ids=jnp.asarray(rev), rev_mask=jnp.asarray(rmask),
-        rev_pos=jnp.asarray(rpos), stripe_index=sidx)
+        rev_pos=jnp.asarray(rpos), stripe_index=sidx,
+        slot_mask=None if slot_mask is None
+        else jnp.asarray(slot_mask.astype(np.float32)))
 
 
 class FullGraphOperands(NamedTuple):
@@ -125,9 +149,8 @@ def full_operands(g: Graph, deg_cap: int | None = None, *,
                   stripe_index: bool = False, stripe_bb: int = 128,
                   stripe: int = 512) -> FullGraphOperands:
     deg_cap = deg_cap or g.max_degree()
-    inv = np.arange(g.n, dtype=np.int32)   # every node is "in batch"
     ids = np.arange(g.n)
-    nbr, mask, _ = _pack_rows(g.in_csr, ids, deg_cap, inv)
+    nbr, mask, _ = _pack_rows(g.in_csr, ids, deg_cap)
     sidx = make_stripe_index(nbr, g.n, mask=mask, bb=stripe_bb,
                              stripe=stripe) if stripe_index else None
     return FullGraphOperands(
@@ -139,8 +162,7 @@ def subgraph_operands(src: np.ndarray, dst: np.ndarray, n_sub: int,
                       deg_cap: int) -> FullGraphOperands:
     from repro.graph.structure import csr_from_coo
     csr = csr_from_coo(src.astype(np.int64), dst.astype(np.int64), n_sub)
-    inv = np.arange(n_sub, dtype=np.int32)
-    nbr, mask, _ = _pack_rows(csr, np.arange(n_sub), deg_cap, inv)
+    nbr, mask, _ = _pack_rows(csr, np.arange(n_sub), deg_cap)
     return FullGraphOperands(
         nbr_ids=jnp.asarray(nbr), nbr_mask=jnp.asarray(mask),
         degrees=jnp.asarray(csr.degrees()))
@@ -165,13 +187,119 @@ def inductive_view(g: Graph) -> Graph:
                        multilabel=g.multilabel, name=g.name + "-inductive")
 
 
+def epoch_slices(perm: np.ndarray,
+                 batch_size: int) -> tuple[np.ndarray, np.ndarray]:
+    """Split a node permutation into S static-shape batches: [S, b] ids +
+    [S, b] slot mask.
+
+    The tail batch is wrap-padded with nodes from the START of the
+    permutation (real nodes -> their messages and assignment refreshes stay
+    valid; they merely occur twice in the epoch) and the padding slots are
+    masked out of the loss via the 0 entries of the slot mask.  Shared by
+    the host-driven stream and the device-resident epoch executor so both
+    paths traverse identical batches for the same permutation.
+
+    ``batch_size`` is clamped to the pool size, which guarantees every
+    batch holds DISTINCT nodes (for S >= 2 the pad, < b, comes from batch
+    0's range; for S == 1 there is no pad): duplicate ids inside one batch
+    would make the node->slot scatter order-dependent and corrupt the
+    counts arithmetic of ``refresh_assignment``.
+    """
+    perm = np.asarray(perm)
+    n = len(perm)
+    batch_size = min(batch_size, n)
+    if n == 0:
+        return (np.zeros((0, 0), np.int64), np.zeros((0, 0), np.float32))
+    n_batches = -(-n // batch_size)
+    pad = n_batches * batch_size - n
+    ids = np.concatenate([perm, perm[:pad]]) if pad else perm
+    slot_mask = np.ones(n_batches * batch_size, np.float32)
+    slot_mask[n:] = 0.0
+    return (ids.reshape(n_batches, batch_size),
+            slot_mask.reshape(n_batches, batch_size))
+
+
 def minibatch_stream(g: Graph, batch_size: int, rng: np.random.Generator,
                      idx_pool: np.ndarray | None = None,
                      deg_cap: int | None = None) -> Iterator[MinibatchPack]:
     """Random-node mini-batches covering the pool once per epoch (the
     paper's default sampling strategy; App. G shows edge/RW sampling give
-    the same accuracy)."""
+    the same accuracy).  The tail batch is wrap-padded to the static batch
+    size with loss-masked slots (``epoch_slices``) so every node of the
+    pool is traversed every epoch -- the freshness contract of
+    ``node_loss``'s docstring."""
     pool = idx_pool if idx_pool is not None else np.arange(g.n)
-    perm = rng.permutation(pool)
-    for s in range(0, len(perm) - batch_size + 1, batch_size):
-        yield make_pack(g, perm[s:s + batch_size], deg_cap)
+    ids, slot_mask = epoch_slices(rng.permutation(pool), batch_size)
+    for s in range(ids.shape[0]):
+        yield make_pack(g, ids[s], deg_cap, slot_mask=slot_mask[s])
+
+
+# ---------------------------------------------------------------------------
+# device-resident epoch plans (DESIGN.md section 9)
+# ---------------------------------------------------------------------------
+
+class EpochPlan(NamedTuple):
+    """Pack-once, device-resident neighbor tables for the epoch executor.
+
+    Built ONCE per (graph, deg_cap) by :func:`build_epoch_plan`; holds the
+    padded in-/out-edge lists of EVERY node as [n, D] device arrays.  An
+    epoch's S stacked batches (logically [S, b, D]) are materialized lazily
+    inside jit by :func:`plan_batch`: gather the rows of a batch's node ids
+    and recompute ``nbr_pos``/``rev_pos`` with a node->slot scatter.  A
+    reshuffle therefore costs one device gather per batch -- zero host-side
+    pack work inside the epoch loop.
+    """
+    nbr_ids: jnp.ndarray    # [n, D]   in-neighbor global ids (0 on padding)
+    nbr_mask: jnp.ndarray   # [n, D]   1.0 on real in-edges
+    rev_ids: jnp.ndarray    # [n, Dr]  out-edge target global ids
+    rev_mask: jnp.ndarray   # [n, Dr]
+
+    @property
+    def n(self) -> int:
+        return self.nbr_ids.shape[0]
+
+
+def build_epoch_plan(g: Graph, deg_cap: int | None = None, *,
+                     full_ops: Optional[FullGraphOperands] = None
+                     ) -> EpochPlan:
+    """One-time whole-graph pack (vectorized CSR slicing) -> device tables.
+
+    O(n * D) device bytes -- the same order as the ``full_operands`` the
+    trainer already keeps resident for evaluation.  Pass those as
+    ``full_ops`` and the plan ALIASES their in-edge tables (when the
+    deg_cap matches) instead of packing and storing the [n, D] forward
+    tables a second time; only the reverse tables are new.
+    """
+    deg_cap = deg_cap or g.max_degree()
+    ids = np.arange(g.n)
+    # no inv: positions are recomputed in-jit by plan_batch per batch
+    if full_ops is not None and tuple(full_ops.nbr_ids.shape) == \
+            (g.n, deg_cap):
+        nbr_d, nmask_d = full_ops.nbr_ids, full_ops.nbr_mask
+    else:
+        nbr, nmask, _ = _pack_rows(g.in_csr, ids, deg_cap)
+        nbr_d, nmask_d = jnp.asarray(nbr), jnp.asarray(nmask)
+    rev, rmask, _ = _pack_rows(g.out_csr, ids, deg_cap)
+    return EpochPlan(nbr_ids=nbr_d, nbr_mask=nmask_d,
+                     rev_ids=jnp.asarray(rev), rev_mask=jnp.asarray(rmask))
+
+
+def plan_batch(plan: EpochPlan, batch_ids: jnp.ndarray,
+               slot_mask: Optional[jnp.ndarray] = None) -> MinibatchPack:
+    """In-jit MinibatchPack for one batch of a permutation (node->slot
+    scatter + row gather; bit-identical to ``make_pack`` on the same ids,
+    minus the host-only stripe-index option)."""
+    b = batch_ids.shape[0]
+    batch_ids = batch_ids.astype(jnp.int32)
+    slot = jnp.full((plan.n,), -1, jnp.int32).at[batch_ids].set(
+        jnp.arange(b, dtype=jnp.int32))
+    nbr = plan.nbr_ids[batch_ids]
+    nmask = plan.nbr_mask[batch_ids]
+    rev = plan.rev_ids[batch_ids]
+    rmask = plan.rev_mask[batch_ids]
+    npos = jnp.where(nmask != 0, slot[nbr], -1).astype(jnp.int32)
+    rpos = jnp.where(rmask != 0, slot[rev], -1).astype(jnp.int32)
+    return MinibatchPack(
+        batch_ids=batch_ids, nbr_ids=nbr, nbr_mask=nmask, nbr_pos=npos,
+        rev_ids=rev, rev_mask=rmask, rev_pos=rpos,
+        stripe_index=None, slot_mask=slot_mask)

@@ -20,7 +20,8 @@ from repro.core import codebook as cbm
 from repro.core.codebook import CodebookConfig
 from repro.core.conv import LayerVQState, MinibatchPack, init_layer_vq_state, \
     refresh_assignment
-from repro.graph.batching import FullGraphOperands
+from repro.distributed.collectives import psum_tree
+from repro.graph.batching import EpochPlan, FullGraphOperands, plan_batch
 from repro.nn.gnn_layers import BACKBONES
 from repro.train.optimizer import Optimizer
 
@@ -145,12 +146,13 @@ def vq_forward(params: list[Params], x_b: jax.Array, probes: list[jax.Array],
 # losses / metrics
 # ---------------------------------------------------------------------------
 
-def node_loss(logits: jax.Array, labels: jax.Array, multilabel: bool,
-              mask: Optional[jax.Array] = None) -> jax.Array:
-    """Mean CE/BCE over (optionally masked) rows.  The mask implements the
-    paper's transductive mini-batching: batches traverse ALL nodes (so every
-    node's codeword assignment stays fresh) but only labeled nodes
-    contribute to the loss."""
+def node_loss_terms(logits: jax.Array, labels: jax.Array, multilabel: bool,
+                    mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(numerator, denominator) of the masked-mean CE/BCE.
+
+    The single-device loss is ``num / max(den, 1)``; the data-parallel
+    epoch executor psums each term over the mesh axis before dividing so
+    the sharded loss equals the full-batch masked mean exactly."""
     if multilabel:
         per = jnp.mean(
             jnp.maximum(logits, 0) - logits * labels +
@@ -158,9 +160,19 @@ def node_loss(logits: jax.Array, labels: jax.Array, multilabel: bool,
     else:
         logp = jax.nn.log_softmax(logits, axis=-1)
         per = -jnp.take_along_axis(logp, labels[:, None], 1)[:, 0]
+    return jnp.sum(per * mask), jnp.sum(mask)
+
+
+def node_loss(logits: jax.Array, labels: jax.Array, multilabel: bool,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE/BCE over (optionally masked) rows.  The mask implements the
+    paper's transductive mini-batching: batches traverse ALL nodes (so every
+    node's codeword assignment stays fresh) but only labeled nodes
+    contribute to the loss."""
     if mask is None:
-        return jnp.mean(per)
-    return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        mask = jnp.ones(logits.shape[0], logits.dtype)
+    num, den = node_loss_terms(logits, labels, multilabel, mask)
+    return num / jnp.maximum(den, 1.0)
 
 
 def node_metric(logits: jax.Array, labels: jax.Array,
@@ -200,17 +212,39 @@ def hits_at_k(pos_scores: np.ndarray, neg_scores: np.ndarray,
 # VQ train step (Alg. 1)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
-def vq_train_step(params, vq_states, opt_state, pack: MinibatchPack,
+def _vq_step_body(params, vq_states, opt_state, pack: MinibatchPack,
                   x_b, labels_b, degrees, cfg: GNNConfig, opt: Optimizer,
-                  loss_mask=None, neg_pairs=None, pos_pairs=None):
+                  loss_mask=None, neg_pairs=None, pos_pairs=None,
+                  axis_name=None):
+    """One Alg. 1 step, trace-level -- the ONE implementation behind the
+    jit'd per-step entry point, the ``lax.scan`` epoch executor, and (with
+    ``axis_name``) the shard_map data-parallel executor, so every path
+    stays numerically consistent.
+
+    With ``axis_name`` set (node task only), ``x_b``/``pack`` are this
+    replica's shard of the batch and the replicas are glued into one model
+    per step: the loss is the GLOBAL masked mean (num/den psum'd), param
+    grads are psum'd before the optimizer, codebook (counts, sums) and
+    whitening moments are psum'd inside ``cbm.update``, and the refreshed
+    assignments are all-gathered into the replicated global table
+    (DESIGN.md section 9, "codebook psum rule").
+    """
     probes = [jnp.zeros(s, jnp.float32) for s in probe_shapes(cfg, pack.b)]
+    if cfg.task == "node":
+        lmask = loss_mask if loss_mask is not None \
+            else jnp.ones((pack.b,), jnp.float32)
+        den = jnp.sum(lmask)
+        if axis_name is not None:
+            den = jax.lax.psum(den, axis_name)   # independent of params
+    else:
+        assert axis_name is None, "dp epoch executor is node-task only"
 
     def loss_fn(params, probes):
         out, acts = vq_forward(params, x_b, probes, pack, vq_states,
                                degrees, cfg)
         if cfg.task == "node":
-            loss = node_loss(out, labels_b, cfg.multilabel, loss_mask)
+            num, _ = node_loss_terms(out, labels_b, cfg.multilabel, lmask)
+            loss = num / jnp.maximum(den, 1.0)
         else:
             loss = link_loss(out, pos_pairs, neg_pairs)
         return loss, (acts, out)
@@ -218,6 +252,9 @@ def vq_train_step(params, vq_states, opt_state, pack: MinibatchPack,
     (loss, (acts, out)), (gparams, gprobes) = jax.value_and_grad(
         loss_fn, argnums=(0, 1), has_aux=True)(params, probes)
 
+    if axis_name is not None:
+        loss = jax.lax.psum(loss, axis_name)
+        gparams = psum_tree(gparams, axis_name)
     new_params, new_opt = opt.update(gparams, opt_state, params)
 
     # ---- Alg. 1 line 15-16: VQ update + assignment synchronization ----
@@ -225,19 +262,86 @@ def vq_train_step(params, vq_states, opt_state, pack: MinibatchPack,
     # docstring); its UpdateStats also hands back the whitened-space VQ
     # relative error per layer, surfaced to the trainer as a free monitor.
     cb_cfg = cfg.layer_codebook_cfg()
+    refresh_ids = pack.batch_ids
+    if axis_name is not None:
+        refresh_ids = jax.lax.all_gather(
+            pack.batch_ids, axis_name).reshape(-1)
     new_states, vq_errs = [], []
     for l, vq in enumerate(vq_states):
         feats = acts[l].astype(jnp.float32)
         grads = gprobes[l].reshape(pack.b, -1).astype(jnp.float32)
-        # scale gradients to O(1) for stable codebook geometry; whitening
-        # makes the codebook invariant to this, it only guards fp range
-        new_cb, stats = cbm.update(vq.codebook, feats, grads, cb_cfg)
+        # gradients enter the codebook unscaled: Alg. 2's implicit whitening
+        # normalizes every concat dim, so codebook geometry is invariant to
+        # their magnitude and the EMA stats are fp32 (no fp-range guard)
+        new_cb, stats = cbm.update(vq.codebook, feats, grads, cb_cfg,
+                                   axis_name=axis_name)
+        assign = stats.assignment
+        if axis_name is None:
+            vq_errs.append(stats.relative_error())
+        else:
+            a = jax.lax.all_gather(assign, axis_name)  # [ndev, nb, b_loc]
+            assign = a.transpose(1, 0, 2).reshape(a.shape[1], -1)
+            vq_errs.append(jnp.sqrt(
+                jax.lax.psum(jnp.sum(stats.qerr), axis_name) /
+                (jax.lax.psum(jnp.sum(stats.vnorm2), axis_name) + 1e-12)))
         new_states.append(refresh_assignment(
             LayerVQState(new_cb, vq.assignment, vq.counts),
-            pack.batch_ids, stats.assignment))
-        vq_errs.append(stats.relative_error())
+            refresh_ids, assign))
 
     return new_params, new_states, new_opt, loss, out, jnp.stack(vq_errs)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
+def vq_train_step(params, vq_states, opt_state, pack: MinibatchPack,
+                  x_b, labels_b, degrees, cfg: GNNConfig, opt: Optimizer,
+                  loss_mask=None, neg_pairs=None, pos_pairs=None):
+    return _vq_step_body(params, vq_states, opt_state, pack, x_b, labels_b,
+                         degrees, cfg, opt, loss_mask=loss_mask,
+                         neg_pairs=neg_pairs, pos_pairs=pos_pairs)
+
+
+def _vq_epoch_body(params, vq_states, opt_state, plan: EpochPlan,
+                   perm, slot_mask, x, labels, train_mask, degrees, *,
+                   cfg: GNNConfig, opt: Optimizer, axis_name=None):
+    """``lax.scan`` of ``_vq_step_body`` over the S stacked batches of a
+    node permutation (trace-level; node task).  Each step slices its batch
+    out of the pack-once :class:`~repro.graph.batching.EpochPlan`
+    (``plan_batch``: row gather + node->slot scatter, no host round-trip).
+    With ``axis_name`` this is the per-replica body of the shard_map
+    data-parallel executor (``distributed/data_parallel.py``) and
+    ``perm``/``slot_mask`` are the replica's [S, b/ndev] shard."""
+    def body(carry, xs):
+        params, vq, ost = carry
+        bids, smask = xs
+        pack = plan_batch(plan, bids, smask)
+        lmask = train_mask[bids] * smask
+        params, vq, ost, loss, _, errs = _vq_step_body(
+            params, vq, ost, pack, x[bids], labels[bids], degrees, cfg,
+            opt, loss_mask=lmask, axis_name=axis_name)
+        return (params, vq, ost), (loss, errs)
+
+    (params, vq_states, opt_state), (losses, vq_errs) = jax.lax.scan(
+        body, (params, vq_states, opt_state), (perm, slot_mask))
+    return params, vq_states, opt_state, losses, vq_errs
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"),
+                   donate_argnames=("params", "vq_states", "opt_state"))
+def vq_train_epoch(params, vq_states, opt_state, plan: EpochPlan,
+                   perm: jax.Array, slot_mask: jax.Array, x, labels,
+                   train_mask, degrees, cfg: GNNConfig, opt: Optimizer):
+    """One epoch of Alg. 1 executed entirely on device (DESIGN.md sec. 9):
+    one jit call scanning the per-step body over the stacked batches, with
+    ``(params, vq_states, opt_state)`` carried in donated buffers.
+
+    perm:       [S, b] int  node ids per batch (``epoch_slices``)
+    slot_mask:  [S, b]      0 on wrap-padded tail slots (loss-masked)
+    x / labels / train_mask: full [n, ...] device-resident arrays
+    Returns (params, vq_states, opt_state, losses [S], vq_errs [S, L]).
+    """
+    return _vq_epoch_body(params, vq_states, opt_state, plan, perm,
+                          slot_mask, x, labels, train_mask, degrees,
+                          cfg=cfg, opt=opt)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -12,6 +12,7 @@ memory/message accounting used by benchmarks (Table 2/3 analogues).
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Optional
 
@@ -20,14 +21,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codebook as cbm
-from repro.graph.batching import (full_operands, make_pack, minibatch_stream,
-                                  subgraph_operands)
+from repro.core.conv import refresh_assignment
+from repro.distributed.data_parallel import vq_train_epoch_dp
+from repro.graph.batching import (build_epoch_plan, epoch_slices,
+                                  full_operands, minibatch_stream,
+                                  plan_batch, subgraph_operands)
 from repro.graph.sampling import (cluster_gcn_batches, graphsaint_rw_batches,
                                   ns_sage_batches, partition_graph)
 from repro.graph.structure import Graph
-from repro.models.gnn import (GNNConfig, full_predict, full_train_step,
-                              hits_at_k, init_gnn, init_vq_states,
-                              node_metric, vq_train_step)
+from repro.models.gnn import (GNNConfig, _act_for_layer, _layer_out_dims,
+                              full_predict, full_train_step, hits_at_k,
+                              init_gnn, init_vq_states, node_metric,
+                              vq_train_epoch, vq_train_step)
+from repro.nn.gnn_layers import BACKBONES
 from repro.train.optimizer import adam, rmsprop
 
 
@@ -121,7 +127,20 @@ def train_full(g: Graph, cfg: GNNConfig, *, epochs: int, lr: float = 1e-2,
 
 def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
              lr: float = 3e-3, seed: int = 0, eval_every: int = 10,
-             deg_cap: Optional[int] = None) -> dict:
+             deg_cap: Optional[int] = None, mesh=None) -> dict:
+    """VQ-GNN training (Alg. 1).
+
+    Node-task training runs on the device-resident epoch executor by
+    default: the graph is packed ONCE into an ``EpochPlan`` and each epoch
+    is one ``vq_train_epoch`` call (``lax.scan`` over the stacked batches,
+    DESIGN.md section 9).  ``REPRO_EPOCH_EXECUTOR=0`` falls back to the
+    host-driven per-step loop (debugging; also the link-task path, whose
+    per-batch pair mining is host-side).  Both paths consume one
+    ``rng.permutation`` per epoch and traverse identical wrap-padded
+    batches (``epoch_slices``), so they match numerically on a fixed seed.
+    ``mesh`` (optional, a 1-axis "data" ``Mesh``) runs the epoch under
+    ``shard_map`` data parallelism (``vq_train_epoch_dp``).
+    """
     ops = full_operands(g)
     x = jnp.asarray(g.features)
     labels = jnp.asarray(g.labels)
@@ -132,37 +151,84 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
     rng = np.random.default_rng(seed)
     train_mask = np.zeros(g.n, np.float32)
     train_mask[g.train_idx] = 1.0
-    inv_edge = {tuple(e): i for i, e in enumerate(
-        g.train_edges.tolist())} if cfg.task == "link" else None
+
+    use_epoch = (cfg.task == "node"
+                 and os.environ.get("REPRO_EPOCH_EXECUTOR", "1") != "0")
+    if mesh is not None and not use_epoch:
+        # never fall back to single-device training silently when the
+        # caller explicitly asked for data parallelism
+        raise ValueError(
+            "mesh= (shard_map data parallelism) requires the epoch "
+            "executor: node task and REPRO_EPOCH_EXECUTOR != 0")
+    if mesh is not None:
+        # surface epoch_slices' pool clamp here, against the caller's
+        # numbers, instead of letting the dp divisibility check report a
+        # batch size the caller never passed
+        eff_b = min(batch_size, g.n)
+        nd = mesh.shape["data"]
+        if eff_b % nd != 0:
+            raise ValueError(
+                f"effective batch size {eff_b} (batch_size={batch_size} "
+                f"clamped to the {g.n}-node pool) is not divisible by the "
+                f"data mesh size {nd}")
+    plan = build_epoch_plan(g, deg_cap, full_ops=ops) if use_epoch else None
+    tm = jnp.asarray(train_mask)
 
     hist, t0 = [], time.time()
     vq_errs = None
     for ep in range(epochs):
-        for pack in minibatch_stream(g, batch_size, rng, deg_cap=deg_cap):
-            bidx = np.asarray(pack.batch_ids)
-            kwargs = {}
-            if cfg.task == "link":
-                # intra-batch positive pairs + random negatives
-                inb = np.full(g.n, -1)
-                inb[bidx] = np.arange(len(bidx))
-                e = g.train_edges
-                sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
-                pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
-                if len(pos) < 2:
-                    pos = np.zeros((2, 2), np.int64)
-                neg = rng.integers(0, len(bidx), pos.shape)
-                kwargs = {"pos_pairs": jnp.asarray(pos),
-                          "neg_pairs": jnp.asarray(neg)}
+        if use_epoch:
+            ids, smask = epoch_slices(rng.permutation(np.arange(g.n)),
+                                      batch_size)
+            ids_d = jnp.asarray(ids.astype(np.int32))
+            smask_d = jnp.asarray(smask)
+            if mesh is not None:
+                params, vq, ost, _, errs = vq_train_epoch_dp(
+                    mesh, params, vq, ost, plan, ids_d, smask_d, x,
+                    labels, tm, ops.degrees, cfg, opt)
             else:
-                kwargs = {"loss_mask": jnp.asarray(train_mask[bidx])}
-            params, vq, ost, loss, _, vq_errs = vq_train_step(
-                params, vq, ost, pack, x[bidx], labels[bidx], ops.degrees,
-                cfg, opt, **kwargs)
+                params, vq, ost, _, errs = vq_train_epoch(
+                    params, vq, ost, plan, ids_d, smask_d, x, labels, tm,
+                    ops.degrees, cfg, opt)
+            if errs.shape[0]:
+                vq_errs = errs[-1]
+        else:
+            for pack in minibatch_stream(g, batch_size, rng,
+                                         deg_cap=deg_cap):
+                bidx = np.asarray(pack.batch_ids)
+                kwargs = {}
+                if cfg.task == "link":
+                    # intra-batch positive pairs + random negatives, mined
+                    # over the REAL slots only: wrap-padded tail slots are
+                    # nodes already supervised earlier in the epoch
+                    # (MinibatchPack.slot_mask contract)
+                    slots = np.arange(len(bidx))
+                    if pack.slot_mask is not None:
+                        slots = slots[np.asarray(pack.slot_mask) > 0]
+                    inb = np.full(g.n, -1)
+                    inb[bidx[slots]] = slots
+                    e = g.train_edges
+                    sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
+                    pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
+                    if len(pos) < 2:
+                        pos = np.zeros((2, 2), np.int64)
+                    neg = slots[rng.integers(0, len(slots), pos.shape)]
+                    kwargs = {"pos_pairs": jnp.asarray(pos),
+                              "neg_pairs": jnp.asarray(neg)}
+                else:
+                    lm = train_mask[bidx]
+                    if pack.slot_mask is not None:
+                        # wrap-padded tail slots carry no loss
+                        lm = lm * np.asarray(pack.slot_mask)
+                    kwargs = {"loss_mask": jnp.asarray(lm)}
+                params, vq, ost, loss, _, vq_errs = vq_train_step(
+                    params, vq, ost, pack, x[bidx], labels[bidx],
+                    ops.degrees, cfg, opt, **kwargs)
         if (ep + 1) % eval_every == 0 or ep == epochs - 1:
             m = _evaluate(params, g, cfg, x, ops)
             # whitened-space VQ relative error of the last batch, emitted by
             # the fused update kernel (no extra distance computation); stays
-            # unset when the stream yielded no batch (batch_size > n)
+            # unset when the epoch had no batch (empty node pool)
             if vq_errs is not None:
                 m["vq_err"] = float(jnp.mean(vq_errs))
             hist.append({"epoch": ep + 1, "time": time.time() - t0, **m})
@@ -275,12 +341,16 @@ def vq_inference(params, vq_states, g: Graph, cfg: GNNConfig,
     x = jnp.asarray(g.features)
     cb_cfg = cfg.layer_codebook_cfg()
     states = list(vq_states)
+    bk = BACKBONES[cfg.backbone]
+    # pack ONCE via the epoch plan (aliasing full_ops' in-edge tables) and
+    # derive every batch's pack from it with a device gather -- no
+    # per-layer host repacking, and peak pack memory stays the plan's
+    # [n, D] tables instead of a stored per-batch pack list
+    plan = build_epoch_plan(g, full_ops=ops)
+    batches = [np.arange(s, min(s + batch_size, g.n))
+               for s in range(0, g.n, batch_size)]
     # process the whole node set in batches, layer-locked so that layer
     # l+1 sees refreshed layer-l assignments for every node
-    from repro.core.conv import refresh_assignment
-    from repro.nn.gnn_layers import BACKBONES
-    from repro.models.gnn import _layer_out_dims, _act_for_layer
-    bk = BACKBONES[cfg.backbone]
     acts = x
     for l, (fi, fo) in enumerate(_layer_out_dims(cfg)):
         st = states[l]
@@ -290,10 +360,8 @@ def vq_inference(params, vq_states, g: Graph, cfg: GNNConfig,
             st = refresh_assignment(st, jnp.arange(g.n), assign)
             states[l] = st
         outs = []
-        order = np.arange(g.n)
-        for s in range(0, g.n, batch_size):
-            bidx = order[s:s + batch_size]
-            pack = make_pack(g, bidx)
+        for bidx in batches:
+            pack = plan_batch(plan, jnp.asarray(bidx.astype(np.int32)))
             probe = jnp.zeros(bk.probe_shape(len(bidx), fi, fo,
                                              heads=cfg.heads))
             y = bk.vq_apply(params[l], acts[bidx], probe, pack, st,

@@ -211,9 +211,11 @@ def test_update_fused_pallas_path_matches_cpu_path(monkeypatch):
     _states_allclose(pls_state, cpu_state)
 
 
-def test_train_vq_zero_batches_still_returns():
-    """batch_size > n yields no mini-batch: the vq_err monitor must not
-    crash the eval block (regression: jnp.mean(None))."""
+def test_train_vq_small_graph_pads_single_batch(monkeypatch):
+    """batch_size > n used to yield NO mini-batch (the tail-drop bug, and a
+    jnp.mean(None) crash risk in the vq_err monitor).  epoch_slices now
+    clamps to one full-pool batch, so the epoch trains and the monitor is
+    present -- on both executor paths."""
     from repro.graph.datasets import synthetic_arxiv
     from repro.models.gnn import GNNConfig
     from repro.train.gnn_trainer import train_vq
@@ -221,7 +223,10 @@ def test_train_vq_zero_batches_still_returns():
     cfg = GNNConfig(backbone="gcn", f_in=g.f, hidden=8, n_out=g.num_classes,
                     n_layers=1, codebook=CodebookConfig(k=8, f_prod=4))
     r = train_vq(g, cfg, epochs=1, batch_size=g.n + 40, eval_every=1)
-    assert "val" in r["final"] and "vq_err" not in r["final"]
+    assert "val" in r["final"] and "vq_err" in r["final"]
+    monkeypatch.setenv("REPRO_EPOCH_EXECUTOR", "0")
+    r = train_vq(g, cfg, epochs=1, batch_size=g.n + 40, eval_every=1)
+    assert "val" in r["final"] and "vq_err" in r["final"]
 
 
 def test_update_stats_relative_error_matches_manual():
