@@ -21,6 +21,7 @@ have ``run()`` are wrapped with pass=True rows.
   App. G   -> bench_ablation
   (ours)   -> bench_roofline (from the multi-pod dry-run artifacts)
   (ours)   -> bench_kernels (Pallas kernels, interpret mode, vs oracles)
+  (ours)   -> bench_context (fused VQ-context fwd/bwd vs per-branch loop)
   (ours)   -> bench_epoch (epoch executor: host loop vs scan vs shard_map)
 
 Each suite runs in its own subprocess: a single long-lived process
@@ -36,7 +37,7 @@ import subprocess
 import sys
 import time
 
-SUITES = ["complexity", "memory", "kernels", "epoch", "roofline",
+SUITES = ["complexity", "memory", "kernels", "context", "epoch", "roofline",
           "inference", "convergence", "ablation", "performance"]
 
 

@@ -9,7 +9,11 @@ bounds.py          -- Theorem 2 / Corollary 3 as executable checks
 from repro.core.codebook import (CodebookConfig, CodebookState, init_codebook,
                                  kmeanspp_init)
 from repro.core.conv import (ConvOperands, LayerVQState, MinibatchPack,
-                             fixed_conv_operands, init_layer_vq_state,
-                             out_of_batch_cluster_mass, refresh_assignment)
+                             branch_histogram, fixed_conv_operands,
+                             init_layer_vq_state, out_of_batch_cluster_mass,
+                             refresh_assignment)
 from repro.core.message_passing import (approx_message_passing,
-                                        inject_context_grad, reconstruct)
+                                        inject_context_grad,
+                                        inject_context_grad_materialized,
+                                        inject_context_grad_table,
+                                        reconstruct)

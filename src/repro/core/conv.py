@@ -58,17 +58,40 @@ class LayerVQState(NamedTuple):
     counts: jax.Array      # [n_branches, k] f32    histogram of `assignment`
 
 
+def branch_histogram(ids: jax.Array, k: int,
+                     weights: Optional[jax.Array] = None) -> jax.Array:
+    """Per-branch codeword histogram as ONE flattened segment-sum.
+
+    ids: [n_branches, m] int codeword ids; weights: optional [n_branches, m]
+    (default 1.0 per id) -> [n_branches, k] float32.
+
+    Offsetting branch beta's ids by beta * k turns the per-branch
+    histograms into a single 1-D segment-sum over n_branches * k buckets --
+    one scatter instead of the n_branches-deep vmap'd ``.at[].add`` chains
+    these hot paths (every train step) used to compile to.
+    """
+    nb, m = ids.shape
+    flat = (ids.astype(jnp.int32)
+            + (k * jnp.arange(nb, dtype=jnp.int32))[:, None]).reshape(-1)
+    w = jnp.ones((nb * m,), jnp.float32) if weights is None \
+        else weights.astype(jnp.float32).reshape(-1)
+    return jax.ops.segment_sum(
+        w, flat, num_segments=nb * k).reshape(nb, k)
+
+
 def refresh_assignment(state: LayerVQState, batch_ids: jax.Array,
                        new_assign: jax.Array) -> LayerVQState:
     """Scatter the refreshed batch assignments into the global table
     (Alg. 1 line 16, 'synchronize the codeword assignment matrix')."""
     k = state.counts.shape[-1]
     old = state.assignment[:, batch_ids]                        # [nb, b]
-    counts = state.counts \
-        - jax.vmap(lambda o: jnp.zeros((k,)).at[o].add(1.0))(old) \
-        + jax.vmap(lambda nw: jnp.zeros((k,)).at[nw].add(1.0))(new_assign)
+    # -1 on the evicted ids, +1 on the refreshed ones, in one segment-sum
+    delta = branch_histogram(
+        jnp.concatenate([old, new_assign], axis=1), k,
+        jnp.concatenate([jnp.full_like(old, -1, dtype=jnp.float32),
+                         jnp.ones(new_assign.shape, jnp.float32)], axis=1))
     assignment = state.assignment.at[:, batch_ids].set(new_assign)
-    return LayerVQState(state.codebook, assignment, counts)
+    return LayerVQState(state.codebook, assignment, state.counts + delta)
 
 
 def init_layer_vq_state(key: jax.Array, n_nodes: int, f_feat: int,
@@ -78,8 +101,7 @@ def init_layer_vq_state(key: jax.Array, n_nodes: int, f_feat: int,
     cb = init_codebook(k_cb, f_feat, f_grad, cfg)
     assignment = jax.random.randint(
         k_assign, (cb.n_branches, n_nodes), 0, cfg.k).astype(jnp.int32)
-    counts = jax.vmap(
-        lambda a: jnp.zeros((cfg.k,)).at[a].add(1.0))(assignment)
+    counts = branch_histogram(assignment, cfg.k)
     return LayerVQState(cb, assignment, counts)
 
 
@@ -157,6 +179,5 @@ def out_of_batch_cluster_mass(state: LayerVQState,
     """
     k = state.counts.shape[-1]
     batch_assign = state.assignment[:, batch_ids]         # [nb, b]
-    batch_counts = jax.vmap(
-        lambda a: jnp.zeros((k,)).at[a].add(1.0))(batch_assign)
+    batch_counts = branch_histogram(batch_assign, k)
     return jnp.maximum(state.counts - batch_counts, 0.0)

@@ -17,6 +17,15 @@ Two implementation forms, mathematically identical (DESIGN.md section 3):
   * sketch form (dense/global convolutions, VQ-Attention): the [b, k]
     cluster-level mixing matrix C~_out = C_out R directly.
 
+Both context directions route through ``kops.context_ell`` -- ONE fused
+multi-branch kernel dispatch (DESIGN.md section 10).  The Eq. 7 injection
+carries *lazy* residuals: instead of materializing the reconstructed
+gradient-codeword tensor ``[b, Dr, f_grad]`` in the forward pass, the
+residual is ``(rev_vals, rev_ids, grad_codewords, assignment, w)`` --
+O(b * Dr) edge operands plus the O(k * f) codebook the step keeps resident
+anyway -- and the backward pass streams the phantom term through the same
+fused kernel (optionally with the ``@ W^T`` epilogue fused in).
+
 Gradient extraction for the codebook update uses the *probe trick*: a zeros
 input added at the pre-activation; its cotangent under jax.grad is exactly
 G^(l+1) = grad_Z loss (Alg. 1 line 15 needs it for the VQ update).
@@ -38,31 +47,69 @@ from repro.kernels.spmm_ell_hbm import StripeIndex
 
 @jax.custom_vjp
 def inject_context_grad(x_b: jax.Array, rev_vals: jax.Array,
-                        grad_hat: jax.Array, w: Optional[jax.Array]) -> jax.Array:
-    """Identity on ``x_b`` in the forward pass.
+                        rev_ids: jax.Array, grad_codewords: jax.Array,
+                        assignment: jax.Array,
+                        w: Optional[jax.Array]) -> jax.Array:
+    """Identity on ``x_b`` in the forward pass; lazy Eq. 7 residuals.
 
     In the backward pass, adds the paper's out-of-batch gradient messages
 
-        grad_X_B  +=  ( sum_d rev_vals[:, d] * grad_hat[:, d, :] ) @ W^T
+        grad_X_B  +=  ( sum_d rev_vals[:, d] * G~[c(rev_ids[:, d])] ) @ W^T
 
     where ``rev_vals[i, d] = C_{j_d, i}`` are the weights of the reverse
-    (batch -> out-of-batch) edges and ``grad_hat[i, d] = G~[c(j_d)]`` are the
-    reconstructed gradient codewords of the receiving nodes.  This is the
-    ``D_out G~ W^T`` term of Eq. 7 (``D_out = (C^T)_out R``).
+    (batch -> out-of-batch) edges and ``G~[c(j)]`` is the branch-concat
+    gradient codeword of node j under ``assignment``.  This is the
+    ``D_out G~ W^T`` term of Eq. 7 (``D_out = (C^T)_out R``), computed by
+    the streaming ``kops.context_ell`` kernel at backward time -- the
+    forward pass saves only ``(rev_vals, rev_ids, grad_codewords,
+    assignment, w)``, never a ``[b, Dr, f_grad]`` reconstruction.
 
     ``w=None`` skips the W^T factor -- used by row-normalized convolutions
     where the probe (and hence the gradient codewords) live at the
     pre-normalization message level (paper App. E decoupling trick).
     """
+    del rev_vals, rev_ids, grad_codewords, assignment, w
+    return x_b
+
+
+def _inject_fwd(x_b, rev_vals, rev_ids, grad_codewords, assignment, w):
+    return x_b, (rev_vals, rev_ids, grad_codewords, assignment, w)
+
+
+def _inject_bwd(res, g):
+    rev_vals, rev_ids, grad_codewords, assignment, w = res
+    w_t = None if w is None else w.astype(jnp.float32).T
+    phantom = kops.context_ell(rev_ids, rev_vals, assignment,
+                               grad_codewords, w_t)
+    return (g + phantom.astype(g.dtype), jnp.zeros_like(rev_vals), None,
+            jnp.zeros_like(grad_codewords), None,
+            None if w is None else jnp.zeros_like(w))
+
+
+inject_context_grad.defvjp(_inject_fwd, _inject_bwd)
+
+
+@jax.custom_vjp
+def inject_context_grad_materialized(x_b: jax.Array, rev_vals: jax.Array,
+                                     grad_hat: jax.Array,
+                                     w: Optional[jax.Array]) -> jax.Array:
+    """Eq. 7 injection with an explicit ``grad_hat [b, Dr, f]`` tensor.
+
+    For convolutions whose injected gradient is NOT a pure per-branch
+    codeword gather (GAT: the reconstructed codeword concat passes through
+    the per-head value map before the edge weighting, so branches mix) --
+    the lazy form cannot express it and the reconstruction is a genuine
+    residual.  Fixed convolutions must use :func:`inject_context_grad`.
+    """
     del rev_vals, grad_hat, w
     return x_b
 
 
-def _inject_fwd(x_b, rev_vals, grad_hat, w):
+def _inject_mat_fwd(x_b, rev_vals, grad_hat, w):
     return x_b, (rev_vals, grad_hat, w)
 
 
-def _inject_bwd(res, g):
+def _inject_mat_bwd(res, g):
     rev_vals, grad_hat, w = res
     phantom = jnp.einsum('bd,bdf->bf', rev_vals.astype(jnp.float32),
                          grad_hat.astype(jnp.float32))
@@ -73,7 +120,39 @@ def _inject_bwd(res, g):
             None if w is None else jnp.zeros_like(w))
 
 
-inject_context_grad.defvjp(_inject_fwd, _inject_bwd)
+inject_context_grad_materialized.defvjp(_inject_mat_fwd, _inject_mat_bwd)
+
+
+@jax.custom_vjp
+def inject_context_grad_table(x_b: jax.Array, rev_vals: jax.Array,
+                              grad_table: jax.Array,
+                              w: Optional[jax.Array]) -> jax.Array:
+    """Eq. 7 injection against a row-independent gradient table.
+
+    For sketch-form (dense) convolutions the receiving "neighbors" are the
+    k clusters themselves, identical for every batch row: the phantom term
+    is ``rev_vals [b, m] @ grad_table [m, f]``.  The residual is the
+    O(m * f) table -- not its ``[b, m, f]`` broadcast.
+    """
+    del rev_vals, grad_table, w
+    return x_b
+
+
+def _inject_tab_fwd(x_b, rev_vals, grad_table, w):
+    return x_b, (rev_vals, grad_table, w)
+
+
+def _inject_tab_bwd(res, g):
+    rev_vals, grad_table, w = res
+    phantom = rev_vals.astype(jnp.float32) @ grad_table.astype(jnp.float32)
+    if w is not None:
+        phantom = phantom @ w.astype(jnp.float32).T
+    return (g + phantom.astype(g.dtype), jnp.zeros_like(rev_vals),
+            jnp.zeros_like(grad_table),
+            None if w is None else jnp.zeros_like(w))
+
+
+inject_context_grad_table.defvjp(_inject_tab_fwd, _inject_tab_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -110,18 +189,15 @@ def context_messages_reconstruct(out_vals: jax.Array, out_ids: jax.Array,
     feat_codewords: [n_branches, k, f_blk];  assignment: [n_branches, n]
     returns   [b, f]   =  sum_d out_vals[:, d] * X^_{j_d}
 
-    Routed per branch through the SpMM-ELL dispatch: the gather source is
-    the branch's [k, f_blk] codeword table, so per-branch memory stays
-    O(k * f_blk) regardless of graph size and the [b, D, f] reconstructed
-    intermediate of the naive form is never materialized on device
-    (DESIGN.md section 3) -- sum_d val[:, d] * cw[assign[out_ids[:, d]]]
-    is exactly an ELLPACK SpMM with the assignment as the index map.
+    ONE fused ``kops.context_ell`` dispatch regardless of n_branches
+    (DESIGN.md section 10): assignment gather + codeword gather + weighted
+    accumulate over D happen inside a single kernel against the resident
+    [n_branches * k, f_blk] codeword tables -- no per-branch Python loop,
+    no [n_branches, b, D] gathered-assignment intermediate, and the naive
+    [b, D, f] reconstruction is never materialized on device.
     """
     cw = jax.lax.stop_gradient(feat_codewords)
-    branch_ids = assignment[:, out_ids]                   # [nb, b, D]
-    per_branch = [kops.spmm_ell(branch_ids[i], out_vals, cw[i])
-                  for i in range(feat_codewords.shape[0])]
-    return jnp.concatenate(per_branch, axis=-1)
+    return kops.context_ell(out_ids, out_vals, assignment, cw)
 
 
 def context_messages_sketch(c_out_sketch: jax.Array,
@@ -187,12 +263,15 @@ def approx_message_passing(ops_: ConvOperands, x_b: jax.Array,
 
     Returns M = C_in X_B + C~_out X~  of shape [b, f]; its cotangent under
     autodiff is  C_in^T G_B (+ exact learnable-h paths)  and the custom rule
-    adds  D_out G~ (W^T).
+    adds  D_out G~ (W^T).  The injection is lazy (module docstring): the
+    forward pass stores edge operands + the codebook, not a reconstructed
+    ``[b, Dr, f_grad]`` tensor, and the backward streams Eq. 7 through the
+    same fused context kernel the forward uses.
     """
     if inject:
-        grad_hat = reconstruct(grad_codewords, assignment, ops_.rev_ids)
-        grad_hat = jax.lax.stop_gradient(grad_hat)      # [b, Dr, f_grad]
-        x_b = inject_context_grad(x_b, ops_.rev_vals, grad_hat, w)
+        x_b = inject_context_grad(
+            x_b, ops_.rev_vals, ops_.rev_ids,
+            jax.lax.stop_gradient(grad_codewords), assignment, w)
     m = intra_messages(ops_.in_pos, ops_.in_vals, x_b, ops_.stripe_index)
     m = m + context_messages_reconstruct(
         ops_.out_vals, ops_.out_ids, feat_codewords, assignment)

@@ -22,6 +22,15 @@ The ndev=1 instantiation is numerically identical to
 ``models.gnn.vq_train_epoch``; the multi-device run is identical to the
 same body under ``jax.vmap(axis_name=...)`` over the sub-batch axis (the
 parity oracles in tests/test_epoch_executor.py).
+
+Eq. 7 backward under DP: the injection's residuals are *lazy*
+(``core/message_passing.py`` / DESIGN.md section 10) -- each replica's
+scan carry holds only its [b/ndev, Dr] reverse-edge operands plus the
+replicated O(k * f) codebook and assignment tables it keeps anyway, and
+the backward streams the phantom term through the fused
+``kops.context_ell`` dispatch per replica with no collective (the
+codeword tables are replica-identical by the psum rule above).  Nothing
+per-replica scales as [b/ndev, Dr, f_grad].
 """
 from __future__ import annotations
 

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: fused multi-branch VQ-context ELLPACK SpMM.
+
+The out-of-batch ("context") term of Eq. 6 reconstructs each out-of-batch
+neighbor from its product-VQ codewords and accumulates the weighted
+messages:
+
+    out[i] = sum_d vals[i, d] * concat_beta X~^beta[R^beta[ids[i, d]]]
+
+The paper's scaling argument (Sec. 3.3) is that this term only ever touches
+a [k, f_blk] codeword table per branch -- O(k * f) state, independent of
+graph size.  The pre-fusion implementation still paid per-branch costs the
+math does not require: a materialized ``[n_branches, b, D]`` gathered-
+assignment tensor plus one SpMM kernel launch per branch plus a concat.
+This kernel performs the whole computation in ONE ``(b/bb,)`` grid pass:
+
+  * all branches' codeword tables live VMEM-resident as a single flat
+    ``[n_branches * k, f_blk]`` matrix (k * f is tiny by construction --
+    the point of VQ);
+  * the assignment table rides along as ``[n, n_branches]`` (transposed so
+    a neighbor id selects one contiguous row holding all its branch ids);
+  * the inner loop over the D neighbor slots fuses assignment gather ->
+    flat codeword gather -> weighted accumulate, emitting the
+    branch-concatenated ``[bb, n_branches * f_blk]`` rows directly -- no
+    per-branch intermediate ever exists.
+
+The same kernel is the streaming Eq. 7 backward (DESIGN.md section 10):
+called with the reverse-edge operands and the *gradient* codewords it
+computes ``sum_d rev_vals[:, d] * G~[c(rev_ids[:, d])]``, and the optional
+``w_t`` epilogue fuses the trailing ``@ W^T`` (one resident MXU matmul per
+row tile), so ``inject_context_grad`` needs no ``[b, Dr, f_grad]``
+residual -- the codebook itself is the residual.
+
+Padding contract (shared with spmm_ell): slots with ``vals == 0`` may
+point at any valid node id; rows padded to the ``bb`` tile carry zero vals.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _accumulate(ids_ref, val_ref, assign_ref, cw_ref, *, deg: int, nb: int,
+                k: int, bb: int) -> jax.Array:
+    """Shared fused gather+FMA over the D neighbor slots -> [bb, nb*f_blk]."""
+    f_blk = cw_ref.shape[1]
+    offs = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1) * k  # [1, nb]
+
+    def body(d, acc):
+        ids = ids_ref[:, d]                                # [bb] int32
+        vals = val_ref[:, d].astype(jnp.float32)           # [bb]
+        aid = assign_ref[ids, :] + offs                    # [bb, nb] flat rows
+        rows = cw_ref[aid.reshape(bb * nb), :]             # [bb*nb, f_blk]
+        # row-major flatten: row (i*nb + beta) is branch beta of batch row i,
+        # so this reshape IS the branch concat -- no moveaxis, no copy
+        rows = rows.reshape(bb, nb * f_blk).astype(jnp.float32)
+        return acc + vals[:, None] * rows
+
+    return jax.lax.fori_loop(
+        0, deg, body, jnp.zeros((bb, nb * f_blk), jnp.float32))
+
+
+def _context_ell_kernel(ids_ref, val_ref, assign_ref, cw_ref, o_ref, *,
+                        deg: int, nb: int, k: int):
+    bb = o_ref.shape[0]
+    o_ref[...] = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
+                             deg=deg, nb=nb, k=k, bb=bb).astype(o_ref.dtype)
+
+
+def _context_ell_wt_kernel(ids_ref, val_ref, assign_ref, cw_ref, wt_ref,
+                           o_ref, *, deg: int, nb: int, k: int):
+    bb = o_ref.shape[0]
+    acc = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
+                      deg=deg, nb=nb, k=k, bb=bb)
+    # fused epilogue: the Eq. 7 ``@ W^T`` as one resident MXU matmul
+    o_ref[...] = jax.lax.dot_general(
+        acc, wt_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def context_ell_pallas(out_ids: jax.Array, out_vals: jax.Array,
+                       assignment: jax.Array, codewords: jax.Array, *,
+                       w_t: Optional[jax.Array] = None,
+                       bb: int = 128, interpret: bool = True) -> jax.Array:
+    """Fused multi-branch codeword SpMM (one kernel for any n_branches).
+
+    out_ids:    [b, D] int32  global node ids (padding: val == 0)
+    out_vals:   [b, D]        edge values
+    assignment: [n_branches, n] int32  per-branch codeword id of every node
+    codewords:  [n_branches, k, f_blk]  feature OR gradient codewords
+    w_t:        optional [n_branches * f_blk, f_out] fused epilogue matmul
+
+    Returns [b, n_branches * f_blk] (branch-concatenated), or [b, f_out]
+    with the ``w_t`` epilogue.
+    """
+    b, deg = out_ids.shape
+    nb, k, f_blk = codewords.shape
+    f_cat = nb * f_blk
+    if deg == 0:
+        f_out = f_cat if w_t is None else w_t.shape[1]
+        return jnp.zeros((b, f_out), jnp.float32)
+
+    bb = min(bb, max(8, b))
+    bp = (b + bb - 1) // bb * bb
+    ids_p = jnp.zeros((bp, deg), jnp.int32).at[:b].set(
+        out_ids.astype(jnp.int32))
+    val_p = jnp.zeros((bp, deg), jnp.float32).at[:b].set(
+        out_vals.astype(jnp.float32))
+    assign_t = assignment.astype(jnp.int32).T          # [n, nb]
+    cw_flat = codewords.reshape(nb * k, f_blk)
+
+    n = assign_t.shape[0]
+    common = dict(deg=deg, nb=nb, k=k)
+    in_specs = [
+        pl.BlockSpec((bb, deg), lambda i: (i, 0)),
+        pl.BlockSpec((bb, deg), lambda i: (i, 0)),
+        pl.BlockSpec((n, nb), lambda i: (0, 0)),
+        pl.BlockSpec((nb * k, f_blk), lambda i: (0, 0)),
+    ]
+    if w_t is None:
+        out = pl.pallas_call(
+            functools.partial(_context_ell_kernel, **common),
+            grid=(bp // bb,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bb, f_cat), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, f_cat), jnp.float32),
+            interpret=interpret,
+        )(ids_p, val_p, assign_t, cw_flat)
+    else:
+        f_out = w_t.shape[1]
+        out = pl.pallas_call(
+            functools.partial(_context_ell_wt_kernel, **common),
+            grid=(bp // bb,),
+            in_specs=in_specs + [
+                pl.BlockSpec((f_cat, f_out), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((bb, f_out), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((bp, f_out), jnp.float32),
+            interpret=interpret,
+        )(ids_p, val_p, assign_t, cw_flat, w_t.astype(jnp.float32))
+    return out[:b]

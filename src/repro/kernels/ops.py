@@ -15,6 +15,12 @@ Production notes (TPU):
     size-based dispatch below picks the variant; override with
     REPRO_SPMM_VARIANT / REPRO_SPMM_VMEM_BUDGET_MB or
     ``configure_spmm_dispatch``.
+  * ``context_ell`` (DESIGN.md section 10) fuses the multi-branch
+    VQ-context term -- Eq. 6 forward and the streaming Eq. 7 backward --
+    into ONE kernel dispatch regardless of n_branches; dispatch falls back
+    to the per-branch loop when the [n_branches, n] assignment table
+    exceeds the VMEM envelope (REPRO_CONTEXT_VARIANT /
+    REPRO_CONTEXT_VMEM_BUDGET_MB or ``configure_context_dispatch``).
   * ``flash_attention``: 32k+ sequences use a (bh, nq, nk) grid with carried
     scratch instead of the resident-KV loop (the HBM SpMM kernel's
     double-buffering idiom is the template; still TODO).
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.vq_assign import vq_assign_pallas
 from repro.kernels.vq_update import vq_assign_update_pallas
+from repro.kernels.context_ell import context_ell_pallas
 from repro.kernels.spmm_ell import spmm_ell_pallas
 from repro.kernels.spmm_ell_hbm import StripeIndex, spmm_ell_hbm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -79,11 +86,17 @@ _dispatch_overrides: dict[str, object] = {}
 
 
 def configure_spmm_dispatch(variant: Optional[str] = None,
-                            vmem_budget_mb: Optional[float] = None) -> None:
+                            vmem_budget_mb: Optional[float] = None, *,
+                            reset: bool = False) -> None:
     """Override spmm_ell dispatch: variant in {'auto', 'resident', 'hbm'}.
 
     Passing None leaves a setting untouched; 'auto' clears a forced variant.
+    ``reset=True`` drops every programmatic override first (back to the
+    environment/defaults) -- tests and benchmarks use it so one case's
+    overrides never leak into the next.
     """
+    if reset:
+        _dispatch_overrides.clear()
     if variant is not None:
         if variant not in ("auto", "resident", "hbm"):
             raise ValueError(f"unknown spmm variant: {variant!r}")
@@ -125,6 +138,103 @@ def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
                 nbr_idx, nbr_val, x, stripe_index, interpret=interpret)
         return spmm_ell_pallas(nbr_idx, nbr_val, x, interpret=interpret)
     return ref.spmm_ell(nbr_idx, nbr_val, x)
+
+
+# ---------------------------------------------------------------------------
+# fused VQ-context (multi-branch codeword SpMM) dispatch
+# ---------------------------------------------------------------------------
+
+# Programmatic overrides for the context dispatch, mirroring the SpMM ones.
+_context_overrides: dict[str, object] = {}
+
+
+def configure_context_dispatch(variant: Optional[str] = None,
+                               vmem_budget_mb: Optional[float] = None, *,
+                               reset: bool = False) -> None:
+    """Override context_ell dispatch: variant in {'auto', 'fused', 'loop'}.
+
+    'fused' forces the one-pass multi-branch kernel (assignment table
+    VMEM-resident); 'loop' forces the per-branch SpMM fallback (assignment
+    gathered outside the kernel -- the pre-fusion path, kept for assignment
+    tables beyond the VMEM envelope and for benchmarking).  ``reset=True``
+    clears all programmatic overrides first.
+    """
+    if reset:
+        _context_overrides.clear()
+    if variant is not None:
+        if variant not in ("auto", "fused", "loop"):
+            raise ValueError(f"unknown context variant: {variant!r}")
+        _context_overrides["variant"] = variant
+    if vmem_budget_mb is not None:
+        _context_overrides["vmem_budget_mb"] = float(vmem_budget_mb)
+
+
+def context_ell_variant(n_nodes: int, n_branches: int,
+                        itemsize: int = 4) -> str:
+    """'fused' or 'loop' for an [n_branches, n_nodes] assignment table.
+
+    The fused kernel keeps the whole assignment table VMEM-resident; past
+    the VMEM envelope the per-branch loop (whose gathers run outside the
+    kernel against the tiny [k, f_blk] tables) takes over.
+    """
+    forced = _context_overrides.get(
+        "variant", os.environ.get("REPRO_CONTEXT_VARIANT", "auto"))
+    if forced not in ("auto", "fused", "loop"):
+        raise ValueError(
+            f"REPRO_CONTEXT_VARIANT={forced!r}: want auto, fused or loop")
+    if forced in ("fused", "loop"):
+        return str(forced)
+    budget_mb = _context_overrides.get(
+        "vmem_budget_mb",
+        float(os.environ.get("REPRO_CONTEXT_VMEM_BUDGET_MB",
+                             str(_DEFAULT_VMEM_BUDGET_MB))))
+    return "loop" if n_nodes * n_branches * itemsize \
+        > float(budget_mb) * 2 ** 20 else "fused"
+
+
+def _context_ell_loop(out_ids, out_vals, assignment, codewords, w_t):
+    """Per-branch fallback: assignment gather + one SpMM per branch.
+
+    Used when the [n_branches, n] assignment table exceeds the fused
+    kernel's VMEM envelope -- each branch's gather source is its tiny
+    [k, f_blk] codeword table, so the per-branch SpMM always dispatches
+    to the resident variant regardless of graph size.
+    """
+    branch_ids = assignment[:, out_ids]                   # [nb, b, D]
+    per_branch = [spmm_ell(branch_ids[i], out_vals, codewords[i])
+                  for i in range(codewords.shape[0])]
+    out = jnp.concatenate(per_branch, axis=-1)
+    if w_t is not None:
+        out = out.astype(jnp.float32) @ w_t.astype(jnp.float32)
+    return out
+
+
+# The CPU execution path is the oracle jitted as ONE fused XLA computation
+# (the dispatch-level analogue of the single kernel launch: the pre-fusion
+# code issued one gather + SpMM + concat dispatch chain per branch).
+_context_ell_ref = jax.jit(ref.context_ell)
+
+
+def context_ell(out_ids: jax.Array, out_vals: jax.Array,
+                assignment: jax.Array, codewords: jax.Array,
+                w_t: Optional[jax.Array] = None) -> jax.Array:
+    """Fused multi-branch VQ-context SpMM with size-based variant dispatch.
+
+    One dispatch regardless of n_branches: the Eq. 6 context forward
+    (feature codewords) and, with reverse-edge operands + gradient
+    codewords (+ optional fused ``w_t`` epilogue), the streaming Eq. 7
+    backward of ``inject_context_grad`` (DESIGN.md section 10).
+    """
+    if _use_pallas():
+        interpret = jax.default_backend() != "tpu"
+        nb, n = assignment.shape
+        if context_ell_variant(n, nb, assignment.dtype.itemsize) == "fused":
+            return context_ell_pallas(out_ids, out_vals, assignment,
+                                      codewords, w_t=w_t,
+                                      interpret=interpret)
+        return _context_ell_loop(out_ids, out_vals, assignment, codewords,
+                                 w_t)
+    return _context_ell_ref(out_ids, out_vals, assignment, codewords, w_t)
 
 
 def flash_attention(q, k, v, *, causal: bool = True):

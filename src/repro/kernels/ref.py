@@ -56,6 +56,38 @@ def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array) -> jax.Array:
                       gathered.astype(jnp.float32))
 
 
+def context_ell(out_ids: jax.Array, out_vals: jax.Array,
+                assignment: jax.Array, codewords: jax.Array,
+                w_t: jax.Array | None = None) -> jax.Array:
+    """Multi-branch VQ-context SpMM oracle (kernels/context_ell.py).
+
+    out_ids/out_vals: [b, D] (padding entries carry val == 0)
+    assignment: [n_branches, n] int32;  codewords: [n_branches, k, f_blk]
+    w_t: optional [n_branches * f_blk, f_out] fused epilogue matmul
+
+    out[i] = sum_d val[i, d] * concat_beta cw[beta, assignment[beta, ids[i, d]]]
+    (optionally @ w_t) -- the Eq. 6 context term and, with reverse-edge
+    operands + gradient codewords, the streaming Eq. 7 backward.
+    """
+    nb, k, f_blk = codewords.shape
+    b = out_ids.shape[0]
+    if out_ids.shape[1] == 0:
+        f_out = nb * f_blk if w_t is None else w_t.shape[1]
+        return jnp.zeros((b, f_out), jnp.float32)
+    branch_ids = assignment[:, out_ids]                    # [nb, b, D]
+    vals = out_vals.astype(jnp.float32)
+    # per-branch gather + contraction inside ONE computation (the branch
+    # loop is a trace-time unroll, and this shape compiles to faster XLA
+    # CPU code than a single [nb, b, D, f_blk] flat-gather einsum)
+    out = jnp.concatenate(
+        [jnp.einsum('bd,bdf->bf', vals,
+                    codewords[i].astype(jnp.float32)[branch_ids[i]])
+         for i in range(nb)], axis=-1)
+    if w_t is not None:
+        out = out @ w_t.astype(jnp.float32)
+    return out
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True,
                     sm_scale: float | None = None) -> jax.Array:

@@ -125,20 +125,27 @@ def full_forward(params: list[Params], x: jax.Array,
 
 def vq_forward(params: list[Params], x_b: jax.Array, probes: list[jax.Array],
                pack: MinibatchPack, vq_states: list[LayerVQState],
-               degrees: jax.Array, cfg: GNNConfig
+               degrees: jax.Array, cfg: GNNConfig,
+               inject: Optional[bool] = None
                ) -> tuple[jax.Array, list[jax.Array]]:
     """Returns (output, per-layer input activations) -- the activations pair
-    with the probe cotangents for the codebook update (Alg. 1 line 15)."""
+    with the probe cotangents for the codebook update (Alg. 1 line 15).
+
+    ``inject`` overrides ``cfg.grad_inject`` (the Eq. 7 custom-VJP wrapper);
+    inference/eval passes False -- the injection only matters under
+    ``jax.grad`` and its lazy residuals (message_passing.py) are a
+    training-path contract, not an eval cost.
+    """
     bk = BACKBONES[cfg.backbone]
     cb_cfg = cfg.layer_codebook_cfg()
+    inject = cfg.grad_inject if inject is None else inject
     acts = []
     x = x_b
     for l, (p, vq, (fi, fo)) in enumerate(
             zip(params, vq_states, _layer_out_dims(cfg))):
         acts.append(x)
         x = bk.vq_apply(p, x, probes[l], pack, vq, degrees, cb_cfg,
-                        _act_for_layer(cfg, l), fi, fo,
-                        inject=cfg.grad_inject)
+                        _act_for_layer(cfg, l), fi, fo, inject=inject)
     return x, acts
 
 
@@ -348,7 +355,8 @@ def vq_train_epoch(params, vq_states, opt_state, plan: EpochPlan,
 def vq_eval_batch(params, vq_states, pack: MinibatchPack, x_b, degrees,
                   cfg: GNNConfig):
     probes = [jnp.zeros(s, jnp.float32) for s in probe_shapes(cfg, pack.b)]
-    out, _ = vq_forward(params, x_b, probes, pack, vq_states, degrees, cfg)
+    out, _ = vq_forward(params, x_b, probes, pack, vq_states, degrees, cfg,
+                        inject=False)
     return out
 
 

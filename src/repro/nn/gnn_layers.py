@@ -25,7 +25,9 @@ from repro.core.codebook import CodebookConfig
 from repro.core.conv import (LayerVQState, MinibatchPack, fixed_conv_operands,
                              out_of_batch_cluster_mass)
 from repro.core.message_passing import (approx_message_passing,
-                                        inject_context_grad, reconstruct)
+                                        inject_context_grad_materialized,
+                                        inject_context_grad_table,
+                                        reconstruct)
 from repro.graph.batching import FullGraphOperands
 from repro.kernels import ops as kops
 
@@ -248,11 +250,14 @@ class GAT:
         dr = rev_vals.shape[1]
         # fold heads into the neighbor axis; backward weight has no W factor
         # (probe lives pre-normalization, value space is the xw space) -> the
-        # injected grad must be mapped back through W^T per head:
+        # injected grad must be mapped back through W^T per head.  The
+        # per-head W map mixes the product-VQ branches, so the lazy
+        # codeword-residual form cannot express this tensor: GAT keeps the
+        # materialized injection (message_passing.py docstring).
         ghat_x = jnp.einsum('bdhe,fhe->bdhf', ghat, p["w"]
                             ).reshape(b, dr * heads, f_in)
         if inject:
-            x_b = inject_context_grad(
+            x_b = inject_context_grad_materialized(
                 x_b, rev_vals.transpose(0, 2, 1).reshape(b, heads * dr),
                 ghat_x.reshape(b, heads * dr, f_in), None)
 
@@ -364,14 +369,15 @@ class GraphTransformer:
         rev_vals = jax.lax.stop_gradient(
             rev_vals.transpose(2, 0, 1).reshape(b, heads * kk))  # [b, h*k]
         # gradient codewords live at the attention-output (y) level; the
-        # value path maps them back to x space per head: W_v,h G~_h
+        # value path maps them back to x space per head: W_v,h G~_h.  The
+        # receiving "neighbors" are the k clusters -- identical for every
+        # row -- so the injection residual is the [h*k, f_in] table itself,
+        # not its [b, h*k, f_in] broadcast (table-form injection).
         gcw_h = gcw.reshape(kk, heads, dh)
         ghat_x = jnp.einsum('khe,fhe->hkf', gcw_h, p["wv"])     # [h, k, f_in]
-        ghat_x = jnp.broadcast_to(
-            ghat_x.reshape(1, heads * kk, f_in), (b, heads * kk, f_in))
-        ghat_x = jax.lax.stop_gradient(ghat_x)
+        ghat_x = jax.lax.stop_gradient(ghat_x.reshape(heads * kk, f_in))
         if inject:
-            x_b = inject_context_grad(x_b, rev_vals, ghat_x, None)
+            x_b = inject_context_grad_table(x_b, rev_vals, ghat_x, None)
 
         # ---- Eq. 6 forward: softmax over (b in-batch + k clusters) ----
         q = jnp.einsum('bf,fhe->hbe', x_b, p["wq"]) / jnp.sqrt(dh)

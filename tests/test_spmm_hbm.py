@@ -179,6 +179,24 @@ def test_spmm_variant_configure(monkeypatch):
         ops._dispatch_overrides.clear()
 
 
+def test_spmm_variant_configure_reset(monkeypatch):
+    """reset=True drops programmatic overrides instead of leaking them
+    between test/benchmark cases."""
+    monkeypatch.delenv("REPRO_SPMM_VARIANT", raising=False)
+    monkeypatch.delenv("REPRO_SPMM_VMEM_BUDGET_MB", raising=False)
+    try:
+        ops.configure_spmm_dispatch(variant="hbm", vmem_budget_mb=0.001)
+        assert ops.spmm_ell_variant(8, 8) == "hbm"
+        ops.configure_spmm_dispatch(reset=True)
+        assert not ops._dispatch_overrides
+        assert ops.spmm_ell_variant(8, 8) == "resident"   # back to defaults
+        # reset composes with new settings in one call
+        ops.configure_spmm_dispatch(variant="hbm", reset=True)
+        assert ops._dispatch_overrides == {"variant": "hbm"}
+    finally:
+        ops._dispatch_overrides.clear()
+
+
 def test_ops_dispatch_routes_hbm(monkeypatch):
     """Forced-pallas + forced-hbm: ops.spmm_ell runs the HBM kernel and
     still matches the oracle."""
