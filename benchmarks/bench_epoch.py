@@ -23,7 +23,6 @@ from __future__ import annotations
 import benchmarks._device_env  # noqa: F401  (sets XLA_FLAGS; precedes jax)
 
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -68,14 +67,10 @@ class _Env:
 
 
 def _time_epochs(run_epoch, reps: int = 3) -> float:
-    """Best-of-reps wall seconds per epoch, after one warmup (compile)."""
-    run_epoch()
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.time()
-        run_epoch()
-        best = min(best, time.time() - t0)
-    return best
+    """Best-of-reps wall seconds per epoch, after one warmup (compile) --
+    the shared ``bench_kernels.time_best_s`` measurement policy."""
+    from benchmarks.bench_kernels import time_best_s
+    return time_best_s(run_epoch, reps)
 
 
 def _host_loop_epoch_s(env: _Env) -> float:

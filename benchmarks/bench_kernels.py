@@ -44,6 +44,21 @@ def _time(fn, *args, reps=5):
     return best * 1e6
 
 
+def time_best_s(fn, reps: int = 3) -> float:
+    """Best-of-reps wall seconds of ``fn()`` after one warmup call (compile
+    + caches) -- the ONE steady-state measurement policy shared by the
+    CI-gated whole-loop benches (epoch executor, inference executor):
+    gates compare serving regimes, not cold starts, and must not drift
+    apart on warmup/reps/clock handling."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
 def _entry(rows, name, us, metrics, tolerance=None):
     ok = True
     if tolerance:

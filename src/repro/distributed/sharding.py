@@ -310,3 +310,13 @@ def epoch_batch_spec() -> P:
     """PartitionSpec of the stacked [S, b] epoch arrays (perm / slot mask):
     scan axis replicated, batch axis split over "data"."""
     return P(None, "data")
+
+
+def serve_batch_spec() -> P:
+    """PartitionSpec of a serving request micro-batch [b] of node ids
+    (``launch/serve_gnn.py``): the single batch axis split over "data" --
+    :func:`epoch_batch_spec` minus the scan axis.  Placing the ids with
+    this spec lets jit's SPMD partitioner split the O(b) serve step
+    (gathers + codeword forward) across the mesh while the plan/codebook
+    tables stay replicated."""
+    return P("data")

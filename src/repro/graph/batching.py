@@ -219,6 +219,18 @@ def epoch_slices(perm: np.ndarray,
             slot_mask.reshape(n_batches, batch_size))
 
 
+def inference_slices(n: int,
+                     batch_size: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static-shape inference batches: :func:`epoch_slices` over the
+    identity permutation (inference traverses every node once, in order --
+    shuffling buys nothing without a loss).  Shared by ``vq_inference``,
+    the serving warm pass, and the inference benchmark so every consumer
+    inherits the wrap-padded tail-batch contract instead of re-inventing a
+    ragged tail (the pre-executor path recompiled per layer whenever
+    ``n % batch_size != 0``)."""
+    return epoch_slices(np.arange(n), batch_size)
+
+
 def minibatch_stream(g: Graph, batch_size: int, rng: np.random.Generator,
                      idx_pool: np.ndarray | None = None,
                      deg_cap: int | None = None) -> Iterator[MinibatchPack]:

@@ -123,7 +123,8 @@ def full_forward(params: list[Params], x: jax.Array,
     return x
 
 
-def vq_forward(params: list[Params], x_b: jax.Array, probes: list[jax.Array],
+def vq_forward(params: list[Params], x_b: jax.Array,
+               probes: Optional[list[jax.Array]],
                pack: MinibatchPack, vq_states: list[LayerVQState],
                degrees: jax.Array, cfg: GNNConfig,
                inject: Optional[bool] = None
@@ -134,7 +135,9 @@ def vq_forward(params: list[Params], x_b: jax.Array, probes: list[jax.Array],
     ``inject`` overrides ``cfg.grad_inject`` (the Eq. 7 custom-VJP wrapper);
     inference/eval passes False -- the injection only matters under
     ``jax.grad`` and its lazy residuals (message_passing.py) are a
-    training-path contract, not an eval cost.
+    training-path contract, not an eval cost.  ``probes=None`` skips the
+    probe taps entirely (gradient-free paths: inference executor, serving)
+    instead of adding per-layer zero tensors.
     """
     bk = BACKBONES[cfg.backbone]
     cb_cfg = cfg.layer_codebook_cfg()
@@ -144,7 +147,8 @@ def vq_forward(params: list[Params], x_b: jax.Array, probes: list[jax.Array],
     for l, (p, vq, (fi, fo)) in enumerate(
             zip(params, vq_states, _layer_out_dims(cfg))):
         acts.append(x)
-        x = bk.vq_apply(p, x, probes[l], pack, vq, degrees, cb_cfg,
+        x = bk.vq_apply(p, x, None if probes is None else probes[l],
+                        pack, vq, degrees, cb_cfg,
                         _act_for_layer(cfg, l), fi, fo, inject=inject)
     return x, acts
 
@@ -208,6 +212,11 @@ def link_loss(emb: jax.Array, pos: jax.Array, neg: jax.Array,
 
 def hits_at_k(pos_scores: np.ndarray, neg_scores: np.ndarray,
               k: int = 50) -> float:
+    if len(pos_scores) == 0:
+        # no positive pairs in the split: hits@k is 0 by convention (the
+        # mean of an empty array would silently propagate NaN into the
+        # metric history)
+        return 0.0
     if len(neg_scores) < k:
         thresh = neg_scores.min() if len(neg_scores) else -np.inf
     else:
@@ -354,9 +363,124 @@ def vq_train_epoch(params, vq_states, opt_state, plan: EpochPlan,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def vq_eval_batch(params, vq_states, pack: MinibatchPack, x_b, degrees,
                   cfg: GNNConfig):
-    probes = [jnp.zeros(s, jnp.float32) for s in probe_shapes(cfg, pack.b)]
-    out, _ = vq_forward(params, x_b, probes, pack, vq_states, degrees, cfg,
+    out, _ = vq_forward(params, x_b, None, pack, vq_states, degrees, cfg,
                         inject=False)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# device-resident mini-batched inference (DESIGN.md section 11)
+# ---------------------------------------------------------------------------
+
+# Incremented at TRACE time of the jitted inference entry points.  The
+# compile-count contract tests pin the executor's promise on it: one
+# inference pass costs n_layers layer traces (and a serve step one trace),
+# independent of the batch count S and of whether the batch size divides n.
+INFER_TRACE_COUNT = {"layer": 0, "serve": 0}
+
+
+def _vq_infer_layer_body(params_l, vq_state: LayerVQState, plan: EpochPlan,
+                         perm, slot_mask, acts, degrees, *,
+                         cfg: GNNConfig, layer: int) -> jax.Array:
+    """One layer's sweep over ALL S batches as a single ``lax.scan``
+    (trace-level).  Each step derives its pack in-jit from the pack-once
+    plan (``plan_batch``), runs the probe-free codeword forward, and
+    scatters the batch's output into the [n+1, f_out] activation table
+    carried through the scan (in-place on device; the sacrificial row n
+    absorbs wrap-padded tail slots so a node duplicated by the padding
+    keeps its real-slot output).
+    """
+    INFER_TRACE_COUNT["layer"] += 1
+    bk = BACKBONES[cfg.backbone]
+    cb_cfg = cfg.layer_codebook_cfg()
+    fi, fo = _layer_out_dims(cfg)[layer]
+    act = _act_for_layer(cfg, layer)
+    n = plan.n
+
+    def body(out, xs):
+        bids, smask = xs
+        pack = plan_batch(plan, bids, smask)
+        y = bk.vq_apply(params_l, acts[bids], None, pack, vq_state,
+                        degrees, cb_cfg, act, fi, fo, inject=False)
+        dst = jnp.where(smask > 0, bids, n).astype(jnp.int32)
+        return out.at[dst].set(y), None
+
+    out0 = jnp.zeros((n + 1, fo), acts.dtype)
+    out, _ = jax.lax.scan(body, out0, (perm, slot_mask))
+    return out[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "layer", "inductive"))
+def vq_infer_layer(params_l, vq_state: LayerVQState, plan: EpochPlan,
+                   perm: jax.Array, slot_mask: jax.Array, acts: jax.Array,
+                   degrees, cfg: GNNConfig, layer: int,
+                   inductive: bool = False
+                   ) -> tuple[jax.Array, LayerVQState]:
+    """Layer-locked mini-batched codeword inference for ONE layer, entirely
+    on device: one jit call scanning all S batches (DESIGN.md section 11).
+
+    perm:       [S, b] int  node ids per batch (``inference_slices``)
+    slot_mask:  [S, b]      0 on wrap-padded tail slots (outputs discarded)
+    acts:       [n, f_in]   every node's layer input (layer l-1 outputs)
+
+    With ``inductive`` the feature-half codeword assignment of EVERY node
+    is refreshed from ``acts`` before the sweep (paper Sec. 6: unseen nodes
+    get their nearest codeword by feature distance) -- inside the same jit,
+    so the inductive path costs zero extra host round-trips.  Returns the
+    [n, f_out] output table and the (possibly refreshed) layer state.
+    """
+    if inductive:
+        fi, _ = _layer_out_dims(cfg)[layer]
+        assign = cbm.assign_features_only(
+            vq_state.codebook, acts, fi, cfg.layer_codebook_cfg())
+        vq_state = refresh_assignment(
+            vq_state, jnp.arange(plan.n, dtype=jnp.int32), assign)
+    out = _vq_infer_layer_body(params_l, vq_state, plan, perm, slot_mask,
+                               acts, degrees, cfg=cfg, layer=layer)
+    return out, vq_state
+
+
+def vq_infer_epoch(params: list[Params], vq_states: list[LayerVQState],
+                   plan: EpochPlan, perm: jax.Array, slot_mask: jax.Array,
+                   x: jax.Array, degrees, cfg: GNNConfig, *,
+                   inductive: bool = False
+                   ) -> tuple[jax.Array, list[LayerVQState]]:
+    """Whole-network layer-synchronous inference on the epoch executor:
+    n_layers jit calls total (one ``vq_infer_layer`` scan per layer, so
+    layer l+1 sees refreshed layer-l activations -- and, inductively,
+    assignments -- for every node).  Compile count is O(n_layers),
+    independent of S and of n % batch_size."""
+    acts = x
+    states = list(vq_states)
+    for l in range(cfg.n_layers):
+        acts, states[l] = vq_infer_layer(
+            params[l], states[l], plan, perm, slot_mask, acts, degrees,
+            cfg, l, inductive)
+    return acts, states
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def vq_serve_batch(params, vq_states, plan: EpochPlan, bids: jax.Array,
+                   x: jax.Array, degrees, cfg: GNNConfig) -> jax.Array:
+    """ONE-compile serving step: all-layer codeword forward for a request
+    micro-batch of node ids (launch/serve_gnn.py).
+
+    O(b) work per request -- in-jit ``plan_batch`` + feature-row gather +
+    the probe-free ``vq_forward`` with codeword context standing in for
+    every out-of-batch neighbor at every layer: no L-hop neighborhood
+    expansion (the paper's Sec. 6 inference claim, served).  Duplicate ids
+    (request padding / repeated requests) are safe: the node->slot scatter
+    keeps one authoritative slot and all duplicate rows compute identical
+    outputs.  Note the regime difference with :func:`vq_infer_epoch`: the
+    serve step feeds layer l+1 with the batch's OWN layer-l outputs (for
+    identical batch partitions the two coincide exactly; the executor is
+    the layer-locked offline sweep, the serve step the online per-request
+    form)."""
+    INFER_TRACE_COUNT["serve"] += 1
+    pack = plan_batch(plan, bids.astype(jnp.int32))
+    out, _ = vq_forward(params, x[bids], None, pack, vq_states, degrees,
+                        cfg, inject=False)
     return out
 
 

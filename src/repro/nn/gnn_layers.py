@@ -6,7 +6,10 @@ Every backbone implements two execution modes sharing one parameter set:
     (the "full-graph" oracle, the sampling baselines' subgraphs, inference);
   * ``vq_apply``    -- the paper's approximated message passing on a
     mini-batch (Eq. 6 forward, Eq. 7 backward via the custom-VJP injection,
-    probe-trick gradient taps for the codebook update).
+    probe-trick gradient taps for the codebook update).  ``probe=None``
+    skips the tap (the probe only matters under ``jax.grad``): the
+    gradient-free consumers -- inference executor, serving step, eval --
+    pass None instead of shipping per-layer zero tensors through the graph.
 
 Backbones: GCN, SAGE-Mean, GAT (learnable row-normalized convolution,
 Lipschitz-clipped scores per App. E), GIN, and a global-attention
@@ -83,7 +86,8 @@ class GCN:
         m = approx_message_passing(ops_, x_b, fcw, gcw, vq.assignment,
                                    p["w"], inject)
         m = m + self_vals[:, None] * x_b
-        return act(m @ p["w"] + p["b"] + probe)
+        z = m @ p["w"] + p["b"]
+        return act(z if probe is None else z + probe)
 
 
 # ===========================================================================
@@ -122,7 +126,8 @@ class SAGE:
         m2 = approx_message_passing(ops_, x_b, fcw, gcw, vq.assignment,
                                     p["w2"], inject)
         # identity convolution is always intra-batch -> exact autodiff
-        return act(x_b @ p["w1"] + m2 @ p["w2"] + p["b"] + probe)
+        z = x_b @ p["w1"] + m2 @ p["w2"] + p["b"]
+        return act(z if probe is None else z + probe)
 
 
 # ===========================================================================
@@ -164,7 +169,8 @@ class GIN:
         s = approx_message_passing(ops_, x_b, fcw, gcw, vq.assignment,
                                    p["w1"], inject)
         m = (1.0 + p["eps"]) * x_b + s
-        h = jax.nn.relu(m @ p["w1"] + p["b1"] + probe)
+        z = m @ p["w1"] + p["b1"]
+        h = jax.nn.relu(z if probe is None else z + probe)
         return act(h @ p["w2"] + p["b2"])
 
 
@@ -285,8 +291,9 @@ class GAT:
             + w_self[..., None] * xw
         den = w_in.sum(1) + w_out.sum(1) + w_self            # [b, H]
         # probe at the augmented (pre-normalization) message level
-        m_aug = jnp.concatenate([num, den[..., None]], axis=-1) \
-            + probe.reshape(b, heads, fh + 1)
+        m_aug = jnp.concatenate([num, den[..., None]], axis=-1)
+        if probe is not None:
+            m_aug = m_aug + probe.reshape(b, heads, fh + 1)
         y = m_aug[..., :fh] / jnp.maximum(m_aug[..., fh:], 1e-9)
         return act(y.reshape(b, heads * fh) + p["b"])
 
@@ -395,7 +402,8 @@ class GraphTransformer:
         att = jax.nn.softmax(s, axis=-1)
         y = jnp.einsum('hbu,hue->bhe', att[..., :b], v_in) \
             + jnp.einsum('hbk,hke->bhe', att[..., b:], v_cw)
-        y = y.reshape(b, heads * dh) + probe
+        y = y.reshape(b, heads * dh)
+        y = y if probe is None else y + probe
         return act(y @ p["wo"] + p["b"])
 
 

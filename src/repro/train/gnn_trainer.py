@@ -5,7 +5,10 @@
   train_sampler  -- NS-SAGE / Cluster-GCN / GraphSAINT-RW baselines
   vq_inference   -- mini-batched codeword inference (the paper's 4x
                     inference speedup claim; supports the inductive setting
-                    via feature-half assignment)
+                    via feature-half assignment).  Device-resident: one
+                    jitted lax.scan per layer over static wrap-padded
+                    batches (models.gnn.vq_infer_epoch, DESIGN.md sec. 11);
+                    the serving front is launch/serve_gnn.py
 
 Each returns a result dict with metric history, wall-times, and the
 memory/message accounting used by benchmarks (Table 2/3 analogues).
@@ -24,15 +27,16 @@ from repro.core import codebook as cbm
 from repro.core.conv import refresh_assignment
 from repro.distributed.data_parallel import vq_train_epoch_dp
 from repro.graph.batching import (build_epoch_plan, epoch_slices,
-                                  full_operands, minibatch_stream,
-                                  plan_batch, subgraph_operands)
+                                  full_operands, inference_slices,
+                                  minibatch_stream, plan_batch,
+                                  subgraph_operands)
 from repro.graph.sampling import (cluster_gcn_batches, graphsaint_rw_batches,
                                   ns_sage_batches, partition_graph)
 from repro.graph.structure import Graph
 from repro.models.gnn import (GNNConfig, _act_for_layer, _layer_out_dims,
                               full_predict, full_train_step, hits_at_k,
                               init_gnn, init_vq_states, node_metric,
-                              vq_train_epoch, vq_train_step)
+                              vq_infer_epoch, vq_train_epoch, vq_train_step)
 from repro.nn.gnn_layers import BACKBONES
 from repro.train.optimizer import adam, rmsprop
 
@@ -69,13 +73,23 @@ def _evaluate(params, g, cfg, x, ops):
 # ---------------------------------------------------------------------------
 
 def vq_batch_bytes(b: int, deg: int, f: int, L: int, k: int,
-                   f_prod: int = 4) -> int:
+                   f_prod: int = 4, f_grad: Optional[int] = None) -> int:
     """VQ-GNN per-batch device bytes: batch features/acts + packed neighbor
-    lists + codebooks + reconstructed context messages."""
-    n_branches = max(1, f // f_prod)
+    lists + codebooks + reconstructed context messages.
+
+    The codebook term uses the codebook's ACTUAL ``branch_layout`` (largest
+    common divisor of the feature/grad widths capped by both block-size
+    budgets) so the Table 3 accounting matches what ``init_codebook``
+    allocates: the naive ``f // f_prod`` branch count disagrees whenever
+    ``f`` is not divisible by ``f_prod`` or the layout is capped by the
+    gradient width (e.g. any transformer-backbone full-width codebook).
+    ``f_grad`` defaults to ``f`` (the Z-level gradient codewords of the
+    fixed-convolution backbones)."""
+    f_grad = f if f_grad is None else f_grad
+    n_branches, fb, gb = cbm.branch_layout(f, f_grad, f_prod)
     pack = b * deg * 4 * 6                     # ids/mask/pos x2 directions
     acts = L * b * f * 4
-    books = L * n_branches * k * 2 * f_prod * 4
+    books = L * n_branches * k * (fb + gb) * 4
     recon = b * deg * f * 4                    # reconstructed neighbors
     return pack + acts + books + recon
 
@@ -83,6 +97,32 @@ def vq_batch_bytes(b: int, deg: int, f: int, L: int, k: int,
 def subgraph_batch_bytes(n_sub: int, m_sub: int, f: int, L: int) -> int:
     """Sampler per-batch bytes: subgraph features+acts+edges."""
     return n_sub * f * 4 * L + m_sub * 2 * 8
+
+
+PAD_BUCKET_CAP = 1 << 22
+
+
+def _pad_bucket(n: int, cap: int = PAD_BUCKET_CAP) -> int:
+    """Round a sampled-subgraph size up to a power-of-two bucket (>= 256),
+    clamped to ``cap``, so one compile is reused: varying sampled-subgraph
+    shapes otherwise recompile every batch and eventually exhaust the XLA
+    CPU JIT.
+
+    A subgraph larger than the cap is a hard error -- the old code
+    silently clamped ``n`` itself to ``cap``, so ``.at[:n_real].set``
+    dropped the overflow nodes and the seed-position mask write raised a
+    bare IndexError far from the cause.  With ``n <= cap`` enforced, the
+    bucket clamp can only shrink padding (sizes in (cap/2, cap] share the
+    cap bucket), never drop real nodes."""
+    if n > cap:
+        raise ValueError(
+            f"sampled subgraph has {n} nodes, above the pad-bucket cap "
+            f"{cap}: shrink the sampler batch size / walk length / fanout "
+            f"or raise the cap")
+    b = 256
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 def messages_per_batch_vq(g: Graph, b: int) -> float:
@@ -233,10 +273,18 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
                 m["vq_err"] = float(jnp.mean(vq_errs))
             hist.append({"epoch": ep + 1, "time": time.time() - t0, **m})
     deg = deg_cap or g.max_degree()
+    # hidden-width layer model: the gradient codewords live at the level
+    # the backbone probes (f_out for fixed convs, f_out + heads for GAT),
+    # so the codebook term must use the backbone's f_grad -- defaulting it
+    # to cfg.hidden re-creates the naive-branch-count accounting bug for
+    # every backbone where f_grad != f
+    fi0, fo0 = _layer_out_dims(cfg)[0]
+    f_grad = BACKBONES[cfg.backbone].f_grad(fi0, fo0, heads=cfg.heads)
     return {"history": hist, "final": hist[-1], "params": params,
             "vq_states": vq,
-            "mem_bytes": vq_batch_bytes(batch_size, deg, cfg.hidden,
-                                        cfg.n_layers, cfg.codebook.k),
+            "mem_bytes": vq_batch_bytes(
+                batch_size, deg, cfg.hidden, cfg.n_layers, cfg.codebook.k,
+                f_prod=cfg.layer_codebook_cfg().f_prod, f_grad=f_grad),
             "messages": messages_per_batch_vq(g, batch_size)}
 
 
@@ -257,15 +305,6 @@ def train_sampler(g: Graph, cfg: GNNConfig, method: str, *, epochs: int,
     deg_cap = g.max_degree()
     hist, t0 = [], time.time()
     max_sub, max_msg = 0, 0
-
-    def _bucket(n):
-        """Round subgraph size up to a bucket so one compile is reused
-        (varying sampled-subgraph shapes otherwise recompile every batch
-        and eventually exhaust the XLA CPU JIT)."""
-        b = 256
-        while b < n:
-            b *= 2
-        return min(b, 1 << 22)
     max_pairs = 4096
 
     for ep in range(epochs):
@@ -281,7 +320,7 @@ def train_sampler(g: Graph, cfg: GNNConfig, method: str, *, epochs: int,
             raise ValueError(method)
         for src, dst, nodes, seed_pos in it:
             n_real = len(nodes)
-            n_pad = _bucket(n_real)
+            n_pad = _pad_bucket(n_real)
             sub_ops = subgraph_operands(src, dst, n_pad, deg_cap)
             xs = jnp.zeros((n_pad, g.f), jnp.float32
                            ).at[:n_real].set(x[nodes])
@@ -333,40 +372,68 @@ def vq_inference(params, vq_states, g: Graph, cfg: GNNConfig,
                  batch_size: int, *, inductive: bool = False) -> np.ndarray:
     """Layer-synchronous mini-batched inference using codeword context.
 
+    Runs on the device-resident inference executor by default
+    (``models.gnn.vq_infer_epoch``, DESIGN.md section 11): the graph is
+    packed ONCE into an ``EpochPlan`` (aliasing ``full_operands``' in-edge
+    tables), the node set is split into static wrap-padded [S, b] batches
+    (``inference_slices``), and each layer's sweep over all S batches is
+    one jitted ``lax.scan`` scattering outputs into the device-resident
+    [n, f] activation table.  XLA compiles O(n_layers) executables --
+    independent of S and of ``g.n % batch_size`` (the pre-executor path
+    was fully eager, one dispatch per (batch, layer), with a ragged tail
+    batch and a host concatenate per layer).
+
+    ``REPRO_INFER_EXECUTOR=0`` falls back to the eager per-batch loop
+    (debugging); both paths traverse identical wrap-padded batches and
+    write only real slots, so they agree to float tolerance.
+
     Inductive extra step (paper Sec. 6): unseen nodes get their codeword
     assignment from the *feature half* of the layer's codebook before the
-    layer executes.
+    layer executes -- inside the jitted layer sweep on the executor path.
     """
     ops = full_operands(g)
     x = jnp.asarray(g.features)
+    plan = build_epoch_plan(g, full_ops=ops)
+    ids, smask = inference_slices(g.n, batch_size)
+    perm = jnp.asarray(ids.astype(np.int32))
+    sm = jnp.asarray(smask)
+
+    if os.environ.get("REPRO_INFER_EXECUTOR", "1") != "0":
+        acts, _ = vq_infer_epoch(params, vq_states, plan, perm, sm, x,
+                                 ops.degrees, cfg, inductive=inductive)
+        return np.asarray(acts)
+    return eager_inference_loop(params, vq_states, plan, ids, smask, x,
+                                ops.degrees, cfg, inductive=inductive)
+
+
+def eager_inference_loop(params, vq_states, plan, ids: np.ndarray,
+                         smask: np.ndarray, x, degrees, cfg: GNNConfig, *,
+                         inductive: bool = False) -> np.ndarray:
+    """The pre-executor inference regime: zero jit, one eager ``vq_apply``
+    dispatch per (batch, layer), a host round-trip per layer -- on the
+    same wrap-padded batches with the same real-slot-only writes as the
+    executor, so the two paths agree to float tolerance.  The
+    ``REPRO_INFER_EXECUTOR=0`` debugging fallback AND the baseline the
+    CI-gated ``benchmarks/bench_inference.py`` comparison times (one
+    implementation, no drift between what ships and what is measured)."""
     cb_cfg = cfg.layer_codebook_cfg()
     states = list(vq_states)
     bk = BACKBONES[cfg.backbone]
-    # pack ONCE via the epoch plan (aliasing full_ops' in-edge tables) and
-    # derive every batch's pack from it with a device gather -- no
-    # per-layer host repacking, and peak pack memory stays the plan's
-    # [n, D] tables instead of a stored per-batch pack list
-    plan = build_epoch_plan(g, full_ops=ops)
-    batches = [np.arange(s, min(s + batch_size, g.n))
-               for s in range(0, g.n, batch_size)]
-    # process the whole node set in batches, layer-locked so that layer
-    # l+1 sees refreshed layer-l assignments for every node
+    n = plan.n
     acts = x
     for l, (fi, fo) in enumerate(_layer_out_dims(cfg)):
         st = states[l]
         if inductive:
-            assign = cbm.assign_features_only(
-                st.codebook, acts, fi, cb_cfg)
-            st = refresh_assignment(st, jnp.arange(g.n), assign)
+            assign = cbm.assign_features_only(st.codebook, acts, fi, cb_cfg)
+            st = refresh_assignment(st, jnp.arange(n), assign)
             states[l] = st
-        outs = []
-        for bidx in batches:
-            pack = plan_batch(plan, jnp.asarray(bidx.astype(np.int32)))
-            probe = jnp.zeros(bk.probe_shape(len(bidx), fi, fo,
-                                             heads=cfg.heads))
-            y = bk.vq_apply(params[l], acts[bidx], probe, pack, st,
-                            ops.degrees, cb_cfg, _act_for_layer(cfg, l),
+        out = np.zeros((n, fo), np.float32)
+        for s in range(ids.shape[0]):
+            pack = plan_batch(plan, jnp.asarray(ids[s].astype(np.int32)))
+            y = bk.vq_apply(params[l], acts[ids[s]], None, pack, st,
+                            degrees, cb_cfg, _act_for_layer(cfg, l),
                             fi, fo, inject=False)
-            outs.append(y)
-        acts = jnp.concatenate(outs, axis=0)
+            real = smask[s] > 0
+            out[ids[s][real]] = np.asarray(y)[real]
+        acts = jnp.asarray(out)
     return np.asarray(acts)
