@@ -27,7 +27,7 @@ def run() -> list[tuple]:
     ns_nodes = []
     for L in (1, 2, 3):
         it = ns_sage_batches(g, b, [r] * L, rng, g.train_idx)
-        src, dst, nodes, _ = next(it)
+        src, dst, nodes, _, _ = next(it)
         ns_nodes.append(len(nodes))
         rows.append((f"complexity/ns-sage/nodes_L{L}", 0.0,
                      f"nodes={len(nodes)}"))

@@ -18,7 +18,11 @@ have ``run()`` are wrapped with pass=True rows.
   Fig. 4   -> bench_convergence
   Table 4/7-> bench_performance
   Sec. 6   -> bench_inference
-  App. G   -> bench_ablation
+  App. G   -> bench_ablation (the scenario matrix: backbone x scale method
+              x task with per-cell accuracy floors vs the full-graph
+              oracle, + the CI-gated sampler-executor throughput row;
+              the CI ``scenario-matrix`` job runs it with --check and
+              uploads BENCH_ablation.json)
   (ours)   -> bench_roofline (from the multi-pod dry-run artifacts)
   (ours)   -> bench_kernels (Pallas kernels, interpret mode, vs oracles)
   (ours)   -> bench_context (fused VQ-context fwd/bwd vs per-branch loop)

@@ -1,4 +1,12 @@
-"""Architecture registry: --arch <id> -> ArchConfig."""
+"""LM/speech/vision architecture registry: --arch <id> -> ArchConfig.
+
+QUARANTINED from the GNN scenario-matrix path: these are the generic
+launch-harness seeds (llama/whisper/moe), kept for ``launch/train.py`` and
+friends.  The scenario matrix enumerates GNN backbones from
+``repro.configs.scenarios`` exclusively, and
+``scenarios.assert_gnn_only`` / ``tests/test_scenarios.py`` enforce that
+none of these ids ever appear as a matrix cell.
+"""
 from repro.configs.base import ArchConfig
 
 from repro.configs import (granite_3_8b, llama3_405b, qwen3_32b, llama3_2_3b,
@@ -19,7 +27,10 @@ _MODULES = {
     "llama-3.2-vision-11b": llama_3_2_vision_11b,
 }
 
-ARCHS = {name: m.CONFIG for name, m in _MODULES.items()}
+# LM_ARCHS is the quarantine-explicit name; ARCHS stays as an alias for
+# the existing launch/test import sites.
+LM_ARCHS = {name: m.CONFIG for name, m in _MODULES.items()}
+ARCHS = LM_ARCHS
 SMOKES = {name: m.smoke for name, m in _MODULES.items()}
 
 

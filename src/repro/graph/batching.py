@@ -187,6 +187,31 @@ def inductive_view(g: Graph) -> Graph:
                        multilabel=g.multilabel, name=g.name + "-inductive")
 
 
+PAD_BUCKET_CAP = 1 << 22
+
+
+def pad_bucket(n: int, cap: int = PAD_BUCKET_CAP) -> int:
+    """Round a sampled-subgraph size up to a power-of-two bucket (>= 256),
+    clamped to ``cap``, so one compile is reused: varying sampled-subgraph
+    shapes otherwise recompile every batch and eventually exhaust the XLA
+    CPU JIT.
+
+    A subgraph larger than the cap is a hard error -- silently clamping
+    ``n`` itself would drop real nodes (`.at[:n_real].set` overflow) and
+    surface as a bare IndexError far from the cause.  With ``n <= cap``
+    enforced, the bucket clamp can only shrink padding (sizes in
+    (cap/2, cap] share the cap bucket), never drop real nodes."""
+    if n > cap:
+        raise ValueError(
+            f"sampled subgraph has {n} nodes, above the pad-bucket cap "
+            f"{cap}: shrink the sampler batch size / walk length / fanout "
+            f"or raise the cap")
+    b = 256
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 def epoch_slices(perm: np.ndarray,
                  batch_size: int) -> tuple[np.ndarray, np.ndarray]:
     """Split a node permutation into S static-shape batches: [S, b] ids +
@@ -315,3 +340,78 @@ def plan_batch(plan: EpochPlan, batch_ids: jnp.ndarray,
         batch_ids=batch_ids, nbr_ids=nbr, nbr_mask=nmask, nbr_pos=npos,
         rev_ids=rev, rev_mask=rmask, rev_pos=rpos,
         stripe_index=None, slot_mask=slot_mask)
+
+
+# ---------------------------------------------------------------------------
+# sampler epoch plans (DESIGN.md section 12)
+# ---------------------------------------------------------------------------
+
+class SamplerEpochPlan(NamedTuple):
+    """An epoch of pre-sampled induced subgraphs, stacked to static shape.
+
+    Built once per epoch by :func:`pack_sampler_epoch` from a sampler's
+    batch list; holds every batch's padded-ELL subgraph operands as
+    [S, P, ...] device tables so ``models.gnn.sampler_train_epoch`` can run
+    the whole epoch as ONE ``lax.scan`` -- the same pack-once/scan regime
+    VQ training rides (section 9), applied to the sampling baselines so the
+    Table 2/4 comparison is executor-vs-executor instead of
+    executor-vs-host-loop.
+
+    ``nbr_ids`` are LOCAL subgraph positions (the per-step scan body treats
+    each [P, D] slice as a self-contained ``FullGraphOperands``); padding
+    rows have empty neighbor lists, zero degree, ``node_ids`` 0 and
+    ``loss_mask`` 0, so they feed nothing into real rows and contribute
+    nothing to the masked loss.
+    """
+    node_ids: jnp.ndarray    # [S, P]    global node ids (0 on padding rows)
+    nbr_ids: jnp.ndarray     # [S, P, D] in-neighbor LOCAL positions
+    nbr_mask: jnp.ndarray    # [S, P, D] 1.0 on real in-edges
+    degrees: jnp.ndarray     # [S, P]    in-degree within the subgraph
+    loss_mask: jnp.ndarray   # [S, P]    seed weight (0 on padding/non-seed)
+
+    @property
+    def s(self) -> int:
+        return self.node_ids.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.node_ids.shape[1]
+
+
+def pack_sampler_epoch(batches: list[tuple], deg_cap: int,
+                       n_pad: Optional[int] = None) -> SamplerEpochPlan:
+    """Stack one epoch of sampler 5-tuples into a :class:`SamplerEpochPlan`.
+
+    batches: list of ``(src, dst, nodes, seed_pos, seed_weight)`` (the
+    ``repro.graph.sampling`` contract).  All subgraphs are padded to one
+    shared width -- ``n_pad`` or the power-of-two bucket of the epoch's
+    largest subgraph (:func:`pad_bucket`, so the bucket rarely moves across
+    epochs and the scanned executable is reused) -- and neighbor lists to
+    ``deg_cap`` (within-subgraph degree is bounded by the graph's, so the
+    global cap is always safe).
+    """
+    from repro.graph.structure import csr_from_coo
+    if not batches:
+        raise ValueError("pack_sampler_epoch needs at least one batch")
+    sizes = [len(nodes) for _, _, nodes, _, _ in batches]
+    p = n_pad if n_pad is not None else pad_bucket(max(sizes))
+    if max(sizes) > p:
+        raise ValueError(f"subgraph of {max(sizes)} nodes exceeds "
+                         f"n_pad={p}")
+    s = len(batches)
+    node_ids = np.zeros((s, p), np.int64)
+    nbr = np.zeros((s, p, deg_cap), np.int32)
+    mask = np.zeros((s, p, deg_cap), np.float32)
+    degs = np.zeros((s, p), np.float32)
+    loss = np.zeros((s, p), np.float32)
+    for i, (src, dst, nodes, seed_pos, seed_w) in enumerate(batches):
+        csr = csr_from_coo(np.asarray(src, np.int64),
+                           np.asarray(dst, np.int64), p)
+        nbr[i], mask[i], _ = _pack_rows(csr, np.arange(p), deg_cap)
+        degs[i] = csr.degrees()
+        node_ids[i, :len(nodes)] = nodes
+        loss[i, np.asarray(seed_pos)] = np.asarray(seed_w, np.float32)
+    return SamplerEpochPlan(
+        node_ids=jnp.asarray(node_ids), nbr_ids=jnp.asarray(nbr),
+        nbr_mask=jnp.asarray(mask), degrees=jnp.asarray(degs),
+        loss_mask=jnp.asarray(loss))

@@ -1,47 +1,148 @@
-"""The paper's sampling baselines (Sec. 5 / Table 2): NS-SAGE, Cluster-GCN,
-GraphSAINT-RW.
+"""The paper's sampling baselines (Sec. 5 / Table 2) + LABOR + the hybrid.
 
-Each sampler yields (src, dst, nodes) induced-subgraph triples; the baseline
-trainer runs exact message passing on the sampled subgraph (which is exactly
-what makes them drop messages -- the effect Table 4 measures).  Inference for
-all samplers is full-neighborhood (their O(d^L) inference cost, Sec. 5).
+Samplers: NS-SAGE, Cluster-GCN, GraphSAINT-RW, and LABOR (Layer-Neighbor
+Sampling, PAPERS.md) -- the strongest modern sampling baseline: one shared
+uniform variate per node per layer correlates the per-seed picks, so the
+sampled union (and the per-batch subgraph) is much smaller than independent
+NS at the same fanout.
+
+Every sampler yields the SAME 5-tuple contract
+
+    (src, dst, nodes, seed_pos, seed_weight)
+
+where ``src/dst`` are local edge endpoints of the induced subgraph,
+``nodes`` the sorted global node ids, ``seed_pos`` the in-subgraph
+positions of this batch's seeds, and ``seed_weight`` a float per seed --
+0.0 on the wrap-padded tail seeds (the ``epoch_slices`` contract: every
+pool id is a loss-bearing seed EXACTLY once per epoch; the legacy
+``range(0, len - b + 1, b)`` loops silently dropped up to b-1 seeds).
+
+The baseline trainer runs exact message passing on the sampled subgraph
+(which is exactly what makes samplers drop messages -- the effect Table 4
+measures), either per batch on the host loop or stacked onto the sampler
+epoch executor (graph/batching.pack_sampler_epoch + lax.scan, DESIGN.md
+section 12).  Inference for all samplers is full-neighborhood (their
+O(d^L) inference cost, Sec. 5).
+
+``hybrid_epoch_batches`` is not a baseline but the VQ/sampling hybrid the
+Message Invariance paper (PAPERS.md) points at: batches are a seed
+partition EXPANDED with LABOR-sampled multi-hop neighbors, fed to the
+plain VQ epoch executor -- messages inside the sampled set go through the
+exact intra-batch SpMM, everything outside through the VQ context kernel.
 """
 from __future__ import annotations
 
-from typing import Iterator
+from typing import Iterator, Optional
 
 import numpy as np
 
+from repro.graph.batching import epoch_slices
 from repro.graph.structure import Graph, induced_subgraph
+
+SamplerBatch = tuple
+
+
+def _labor_select(csr, frontier: np.ndarray, fanout: int,
+                  rvals: np.ndarray) -> list[np.ndarray]:
+    """LABOR's per-seed neighbor pick against layer-shared uniforms.
+
+    ``rvals`` holds ONE uniform variate per graph node, drawn once per
+    layer and shared by every seed of the batch: seed i keeps its (at
+    most) ``fanout`` in-neighbors with the smallest r_t.  Because the
+    ranking variate is attached to the *neighbor*, seeds sharing neighbors
+    make correlated picks -- the union of sampled nodes shrinks toward the
+    per-seed maximum instead of growing additively (the paper's variance
+    reduction).  Deterministic contract: the sampled in-degree of every
+    seed is <= fanout, and identical ``rvals`` give identical picks.
+    """
+    out = []
+    for i in frontier:
+        ns = csr.neighbors(i)
+        if len(ns) > fanout:
+            ns = ns[np.argsort(rvals[ns], kind="stable")[:fanout]]
+        out.append(ns)
+    return out
+
+
+def _ns_select(csr, frontier: np.ndarray, fanout: int,
+               rng: np.random.Generator) -> list[np.ndarray]:
+    """NS-SAGE's per-seed pick: independent uniform fanout subsets."""
+    out = []
+    for i in frontier:
+        ns = csr.neighbors(i)
+        if len(ns) > fanout:
+            ns = rng.choice(ns, fanout, replace=False)
+        out.append(ns)
+    return out
+
+
+def _expand_batch(g: Graph, seeds: np.ndarray, fanouts: list[int],
+                  rng: np.random.Generator, *, labor: bool
+                  ) -> tuple[set, list[list[np.ndarray]]]:
+    """Union of sampled L-hop neighborhoods around ``seeds``.
+
+    Returns (node set, per-layer list of per-frontier-node picks) -- the
+    layer structure is kept so tests can assert the per-layer fanout/
+    in-degree contracts directly instead of re-deriving them from the
+    union."""
+    frontier = np.asarray(seeds, np.int64)
+    nodes = set(frontier.tolist())
+    layers = []
+    for r in fanouts:
+        if labor:
+            picks = _labor_select(g.in_csr, frontier, r, rng.random(g.n))
+        else:
+            picks = _ns_select(g.in_csr, frontier, r, rng)
+        layers.append(picks)
+        nxt = set()
+        for ns in picks:
+            nxt.update(int(t) for t in ns)
+        frontier = np.array(sorted(nxt - nodes), np.int64)
+        nodes.update(nxt)
+    return nodes, layers
+
+
+def _neighborhood_batches(g: Graph, batch_size: int, fanouts: list[int],
+                          rng: np.random.Generator, idx_pool: np.ndarray,
+                          *, labor: bool) -> Iterator[SamplerBatch]:
+    """Shared NS-SAGE / LABOR driver: wrap-padded seed batches, L rounds of
+    neighbor expansion, induced subgraph, loss only on real seeds."""
+    ids, smask = epoch_slices(rng.permutation(idx_pool), batch_size)
+    for s in range(ids.shape[0]):
+        seeds = ids[s]
+        nodes, _ = _expand_batch(g, seeds, fanouts, rng, labor=labor)
+        sub = np.array(sorted(nodes), np.int64)
+        src, dst, sub = induced_subgraph(g, sub)
+        seed_pos = np.searchsorted(sub, seeds)
+        yield src, dst, sub, seed_pos, smask[s].astype(np.float32)
 
 
 def ns_sage_batches(g: Graph, batch_size: int, fanouts: list[int],
                     rng: np.random.Generator,
-                    idx_pool: np.ndarray) -> Iterator[tuple]:
-    """NS-SAGE [2]: per-layer fixed-fanout neighbor sampling.
+                    idx_pool: np.ndarray) -> Iterator[SamplerBatch]:
+    """NS-SAGE [2]: per-layer fixed-fanout independent neighbor sampling.
 
     Returns the union of sampled L-hop neighborhoods as an induced subgraph
     plus the seed positions (loss is only on seeds).  Faithful to the
-    O(b r^L) node blow-up of Table 2.
+    O(b r^L) node blow-up of Table 2.  The seed stream is wrap-padded
+    (``epoch_slices``): every pool id is a weight-1 seed exactly once per
+    epoch, tail padding repeats early seeds at weight 0.
     """
-    perm = rng.permutation(idx_pool)
-    for s in range(0, len(perm) - batch_size + 1, batch_size):
-        seeds = perm[s:s + batch_size]
-        frontier = seeds
-        nodes = set(seeds.tolist())
-        for r in fanouts:
-            nxt = []
-            for i in frontier:
-                ns = g.in_csr.neighbors(i)
-                if len(ns) > r:
-                    ns = rng.choice(ns, r, replace=False)
-                nxt.extend(ns.tolist())
-            frontier = np.array(list(set(nxt) - nodes), np.int64)
-            nodes.update(nxt)
-        sub_nodes = np.array(sorted(nodes), np.int64)
-        src, dst, sub_nodes = induced_subgraph(g, sub_nodes)
-        seed_pos = np.searchsorted(sub_nodes, seeds)
-        yield src, dst, sub_nodes, seed_pos
+    return _neighborhood_batches(g, batch_size, fanouts, rng, idx_pool,
+                                 labor=False)
+
+
+def labor_batches(g: Graph, batch_size: int, fanouts: list[int],
+                  rng: np.random.Generator,
+                  idx_pool: np.ndarray) -> Iterator[SamplerBatch]:
+    """LABOR (Layer-Neighbor Sampling, PAPERS.md): NS-SAGE's loss/fanout
+    contract, but each layer ranks candidate neighbors by one SHARED
+    uniform variate per node (``_labor_select``), so overlapping
+    neighborhoods sample the SAME nodes and the union stays near the
+    per-seed maximum -- the same accuracy at a fraction of the subgraph
+    size (the defusing-the-neighborhood-explosion claim)."""
+    return _neighborhood_batches(g, batch_size, fanouts, rng, idx_pool,
+                                 labor=True)
 
 
 def partition_graph(g: Graph, n_parts: int,
@@ -77,26 +178,33 @@ def partition_graph(g: Graph, n_parts: int,
     return part
 
 
-def cluster_gcn_batches(g: Graph, partition: np.ndarray, parts_per_batch: int,
-                        rng: np.random.Generator) -> Iterator[tuple]:
+def cluster_gcn_batches(g: Graph, partition: np.ndarray,
+                        parts_per_batch: int,
+                        rng: np.random.Generator) -> Iterator[SamplerBatch]:
     """Cluster-GCN [9]: sample partitions, train on their union subgraph
-    (with between-cluster edges inside the union added back)."""
-    n_parts = partition.max() + 1
+    (with between-cluster edges inside the union added back).  The tail
+    batch keeps the remaining partitions instead of dropping them -- every
+    partition (hence every node) trains exactly once per epoch."""
+    n_parts = int(partition.max()) + 1
     order = rng.permutation(n_parts)
-    for s in range(0, n_parts - parts_per_batch + 1, parts_per_batch):
+    for s in range(0, n_parts, parts_per_batch):
         chosen = order[s:s + parts_per_batch]
         nodes = np.where(np.isin(partition, chosen))[0]
         src, dst, nodes = induced_subgraph(g, nodes)
-        yield src, dst, nodes, np.arange(len(nodes))
+        yield (src, dst, nodes, np.arange(len(nodes)),
+               np.ones(len(nodes), np.float32))
 
 
 def graphsaint_rw_batches(g: Graph, roots: int, walk_length: int,
                           rng: np.random.Generator,
-                          idx_pool: np.ndarray) -> Iterator[tuple]:
-    """GraphSAINT-RW [10]: random-walk induced subgraphs."""
-    perm = rng.permutation(idx_pool)
-    for s in range(0, len(perm) - roots + 1, roots):
-        cur = perm[s:s + roots].copy()
+                          idx_pool: np.ndarray) -> Iterator[SamplerBatch]:
+    """GraphSAINT-RW [10]: random-walk induced subgraphs.  The root stream
+    is wrap-padded (``epoch_slices``) so every pool id roots a walk at
+    least once per epoch; the loss covers every subgraph node (the
+    GraphSAINT full-subgraph loss)."""
+    ids, _ = epoch_slices(rng.permutation(idx_pool), roots)
+    for s in range(ids.shape[0]):
+        cur = ids[s].copy()
         nodes = set(cur.tolist())
         for _ in range(walk_length):
             for t in range(len(cur)):
@@ -106,4 +214,108 @@ def graphsaint_rw_batches(g: Graph, roots: int, walk_length: int,
                     nodes.add(int(cur[t]))
         sub_nodes = np.array(sorted(nodes), np.int64)
         src, dst, sub_nodes = induced_subgraph(g, sub_nodes)
-        yield src, dst, sub_nodes, np.arange(len(sub_nodes))
+        yield (src, dst, sub_nodes, np.arange(len(sub_nodes)),
+               np.ones(len(sub_nodes), np.float32))
+
+
+SAMPLER_METHODS = ("ns-sage", "labor", "cluster-gcn", "graphsaint-rw")
+
+
+def sample_epoch(g: Graph, method: str, *, batch_size: int,
+                 rng: np.random.Generator, fanouts: list[int] | None = None,
+                 walk_length: int = 3,
+                 partition: Optional[np.ndarray] = None,
+                 parts_per_batch: int = 4,
+                 idx_pool: Optional[np.ndarray] = None
+                 ) -> list[SamplerBatch]:
+    """One epoch of pre-sampled batches for any sampler, materialized.
+
+    The single sampling front shared by the host loop, the sampler epoch
+    executor packer, the benches and the parity tests: for a given rng
+    state every consumer sees the identical batch stream, which is what
+    makes loop-vs-executor loss traces comparable step by step.
+    """
+    pool = idx_pool if idx_pool is not None else g.train_idx
+    if method == "ns-sage":
+        it = ns_sage_batches(g, batch_size, fanouts or [5], rng, pool)
+    elif method == "labor":
+        it = labor_batches(g, batch_size, fanouts or [5], rng, pool)
+    elif method == "cluster-gcn":
+        if partition is None:
+            raise ValueError("cluster-gcn needs a partition= array")
+        it = cluster_gcn_batches(g, partition, parts_per_batch, rng)
+    elif method == "graphsaint-rw":
+        it = graphsaint_rw_batches(g, batch_size, walk_length, rng, pool)
+    else:
+        raise ValueError(
+            f"unknown sampler {method!r}; expected one of {SAMPLER_METHODS}")
+    return list(it)
+
+
+# ---------------------------------------------------------------------------
+# VQ/sampling hybrid batches (DESIGN.md section 12)
+# ---------------------------------------------------------------------------
+
+def hybrid_epoch_batches(g: Graph, batch_size: int, fanouts: list[int],
+                         rng: np.random.Generator,
+                         n_ctx: Optional[int] = None,
+                         idx_pool: Optional[np.ndarray] = None
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Sampler-expanded [S, b + n_ctx] batches for the VQ epoch executor.
+
+    Each batch holds ``batch_size`` seed slots (an ``epoch_slices``
+    partition of the pool: every node seeds exactly one batch per epoch,
+    keeping every codeword assignment fresh) plus ``n_ctx`` context slots
+    filled with LABOR-sampled multi-hop neighbors of the seeds.  Fed to
+    the UNCHANGED ``vq_train_epoch``: ``vq_apply`` already routes in-batch
+    messages through the exact intra SpMM and everything else through the
+    VQ context kernel, so widening the batch with the sampled neighborhood
+    makes the messages sampling would keep EXACT while VQ covers the
+    out-of-batch remainder sampling would drop (Message Invariance,
+    PAPERS.md).
+
+    Returned slot mask is 1.0 only on loss-bearing seed slots: context
+    slots train nothing directly (their messages and assignment refreshes
+    are the point).  All ids within one row are DISTINCT (the
+    ``refresh_assignment`` scatter contract): sampled duplicates are
+    deduped, shortfalls are filled with out-of-batch nodes in id order.
+    ``n_ctx=0`` degenerates to the plain VQ batches bit-for-bit.
+    """
+    pool = idx_pool if idx_pool is not None else np.arange(g.n)
+    ids, smask = epoch_slices(rng.permutation(pool), batch_size)
+    if ids.size == 0:
+        return ids, smask
+    b = ids.shape[1]
+    n_ctx = b if n_ctx is None else n_ctx
+    n_ctx = min(n_ctx, g.n - b)
+    if n_ctx <= 0:
+        return ids, smask
+    out_ids = np.zeros((ids.shape[0], b + n_ctx), np.int64)
+    out_mask = np.zeros((ids.shape[0], b + n_ctx), np.float32)
+    for s in range(ids.shape[0]):
+        seeds = ids[s]
+        in_batch = np.zeros(g.n, bool)
+        in_batch[seeds] = True
+        picked: list[int] = []
+        frontier = seeds
+        for r in fanouts:
+            sel = _labor_select(g.in_csr, frontier, r, rng.random(g.n))
+            fresh = []
+            for ns in sel:
+                for t in ns:
+                    t = int(t)
+                    if not in_batch[t]:
+                        in_batch[t] = True
+                        fresh.append(t)
+            picked.extend(fresh)
+            frontier = np.array(sorted(fresh), np.int64)
+            if len(picked) >= n_ctx:
+                break
+        ctx = np.array(picked[:n_ctx], np.int64)
+        if len(ctx) < n_ctx:
+            free = np.where(~in_batch)[0]
+            ctx = np.concatenate([ctx, free[:n_ctx - len(ctx)]])
+        out_ids[s, :b] = seeds
+        out_ids[s, b:] = ctx
+        out_mask[s, :b] = smask[s]
+    return out_ids, out_mask

@@ -488,12 +488,12 @@ def vq_serve_batch(params, vq_states, plan: EpochPlan, bids: jax.Array,
 # full-graph / subgraph train steps (oracle + sampling baselines)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
-def full_train_step(params, opt_state, x, ops_: FullGraphOperands,
+def _full_step_body(params, opt_state, x, ops_: FullGraphOperands,
                     labels, loss_mask, cfg: GNNConfig, opt: Optimizer,
                     neg_pairs=None, pos_pairs=None, pair_mask=None):
-    """loss_mask: [n] float weights over nodes (mask-based so padded
-    subgraphs of a bucketed static size reuse one compilation)."""
+    """One exact-message-passing train step, trace-level -- the ONE
+    implementation behind the jit'd per-(sub)graph entry point AND the
+    ``lax.scan`` sampler epoch executor, mirroring ``_vq_step_body``."""
     def loss_fn(params):
         out = full_forward(params, x, ops_, cfg)
         if cfg.task == "node":
@@ -503,6 +503,54 @@ def full_train_step(params, opt_state, x, ops_: FullGraphOperands,
     loss, grads = jax.value_and_grad(loss_fn)(params)
     new_params, new_opt = opt.update(grads, opt_state, params)
     return new_params, new_opt, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
+def full_train_step(params, opt_state, x, ops_: FullGraphOperands,
+                    labels, loss_mask, cfg: GNNConfig, opt: Optimizer,
+                    neg_pairs=None, pos_pairs=None, pair_mask=None):
+    """loss_mask: [n] float weights over nodes (mask-based so padded
+    subgraphs of a bucketed static size reuse one compilation)."""
+    return _full_step_body(params, opt_state, x, ops_, labels, loss_mask,
+                           cfg, opt, neg_pairs=neg_pairs,
+                           pos_pairs=pos_pairs, pair_mask=pair_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"),
+                   donate_argnames=("params", "opt_state"))
+def sampler_train_epoch(params, opt_state, splan, x, labels,
+                        cfg: GNNConfig, opt: Optimizer):
+    """One sampling-baseline epoch entirely on device (DESIGN.md sec. 12):
+    ``lax.scan`` of the exact-subgraph step over the S stacked batches of a
+    :class:`~repro.graph.batching.SamplerEpochPlan`, with ``(params,
+    opt_state)`` carried in donated buffers -- the sampler-side twin of
+    ``vq_train_epoch``, so VQ-vs-sampling comparisons are
+    executor-vs-executor.
+
+    Each step slices its padded subgraph operands out of the plan, gathers
+    the batch's features/labels from the full [n, ...] device tables
+    in-jit, and runs the shared ``_full_step_body``.  Padding rows (empty
+    neighbor lists, loss weight 0) gather node 0's row; they feed no
+    messages into real rows and carry no loss, so their cotangents vanish
+    identically.  Node task only (link pair mining is host-side).
+
+    Returns (params, opt_state, losses [S]).
+    """
+    assert cfg.task == "node", "sampler epoch executor is node-task only"
+
+    def body(carry, xs):
+        params, ost = carry
+        nid, nbr, nmask, deg, lmask = xs
+        ops_ = FullGraphOperands(nbr_ids=nbr, nbr_mask=nmask, degrees=deg)
+        params, ost, loss = _full_step_body(
+            params, ost, x[nid], ops_, labels[nid], lmask, cfg, opt)
+        return (params, ost), loss
+
+    (params, opt_state), losses = jax.lax.scan(
+        body, (params, opt_state),
+        (splan.node_ids, splan.nbr_ids, splan.nbr_mask, splan.degrees,
+         splan.loss_mask))
+    return params, opt_state, losses
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -1,8 +1,17 @@
-"""GNN experiment harness: the paper's four training regimes on one API.
+"""GNN experiment harness: the paper's training regimes on one API.
 
   train_full     -- "Full-Graph" oracle rows of Table 4
   train_vq       -- VQ-GNN (Alg. 1), mini-batched, streaming codebooks
-  train_sampler  -- NS-SAGE / Cluster-GCN / GraphSAINT-RW baselines
+  train_sampler  -- NS-SAGE / LABOR / Cluster-GCN / GraphSAINT-RW
+                    baselines, on the sampler epoch executor by default
+                    (pre-sample an epoch, pack once, one lax.scan --
+                    DESIGN.md sec. 12; REPRO_SAMPLER_EXECUTOR=0 falls back
+                    to the per-batch host loop)
+  train_hybrid   -- VQ/sampling hybrid: sampler-expanded batches on the
+                    UNCHANGED VQ epoch executor (exact messages inside the
+                    sampled set, VQ context outside)
+  train_scenario -- one front for every scale method (the scenario-matrix
+                    registry; REPRO_SCALE_METHOD picks the default)
   vq_inference   -- mini-batched codeword inference (the paper's 4x
                     inference speedup claim; supports the inductive setting
                     via feature-half assignment).  Device-resident: one
@@ -10,14 +19,15 @@
                     batches (models.gnn.vq_infer_epoch, DESIGN.md sec. 11);
                     the serving front is launch/serve_gnn.py
 
-Each returns a result dict with metric history, wall-times, and the
-memory/message accounting used by benchmarks (Table 2/3 analogues).
+Each returns a result dict with metric history, per-epoch loss traces,
+wall-times, and the memory/message accounting used by benchmarks
+(Table 2/3 analogues).
 """
 from __future__ import annotations
 
 import os
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,17 +38,24 @@ from repro.core.conv import refresh_assignment
 from repro.distributed.data_parallel import vq_train_epoch_dp
 from repro.graph.batching import (build_epoch_plan, epoch_slices,
                                   full_operands, inference_slices,
-                                  minibatch_stream, plan_batch,
-                                  subgraph_operands)
-from repro.graph.sampling import (cluster_gcn_batches, graphsaint_rw_batches,
-                                  ns_sage_batches, partition_graph)
+                                  make_pack, minibatch_stream,
+                                  pack_sampler_epoch, pad_bucket,
+                                  plan_batch, subgraph_operands)
+from repro.graph.batching import PAD_BUCKET_CAP  # noqa: F401  (re-export)
+from repro.graph.sampling import (SAMPLER_METHODS, hybrid_epoch_batches,
+                                  partition_graph, sample_epoch)
 from repro.graph.structure import Graph
 from repro.models.gnn import (GNNConfig, _act_for_layer, _layer_out_dims,
                               full_predict, full_train_step, hits_at_k,
                               init_gnn, init_vq_states, node_metric,
-                              vq_infer_epoch, vq_train_epoch, vq_train_step)
+                              sampler_train_epoch, vq_infer_epoch,
+                              vq_train_epoch, vq_train_step)
 from repro.nn.gnn_layers import BACKBONES
 from repro.train.optimizer import adam, rmsprop
+
+# canonical implementation moved to repro.graph.batching (the packer is its
+# natural home); re-exported here for the existing import sites
+_pad_bucket = pad_bucket
 
 
 def _eval_full(params, g, cfg, x, ops):
@@ -99,32 +116,6 @@ def subgraph_batch_bytes(n_sub: int, m_sub: int, f: int, L: int) -> int:
     return n_sub * f * 4 * L + m_sub * 2 * 8
 
 
-PAD_BUCKET_CAP = 1 << 22
-
-
-def _pad_bucket(n: int, cap: int = PAD_BUCKET_CAP) -> int:
-    """Round a sampled-subgraph size up to a power-of-two bucket (>= 256),
-    clamped to ``cap``, so one compile is reused: varying sampled-subgraph
-    shapes otherwise recompile every batch and eventually exhaust the XLA
-    CPU JIT.
-
-    A subgraph larger than the cap is a hard error -- the old code
-    silently clamped ``n`` itself to ``cap``, so ``.at[:n_real].set``
-    dropped the overflow nodes and the seed-position mask write raised a
-    bare IndexError far from the cause.  With ``n <= cap`` enforced, the
-    bucket clamp can only shrink padding (sizes in (cap/2, cap] share the
-    cap bucket), never drop real nodes."""
-    if n > cap:
-        raise ValueError(
-            f"sampled subgraph has {n} nodes, above the pad-bucket cap "
-            f"{cap}: shrink the sampler batch size / walk length / fanout "
-            f"or raise the cap")
-    b = 256
-    while b < n:
-        b *= 2
-    return min(b, cap)
-
-
 def messages_per_batch_vq(g: Graph, b: int) -> float:
     """Paper Sec. 4: VQ preserves ALL messages to the batch: b*d of them."""
     return b * float(g.m) / g.n
@@ -167,7 +158,8 @@ def train_full(g: Graph, cfg: GNNConfig, *, epochs: int, lr: float = 1e-2,
 
 def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
              lr: float = 3e-3, seed: int = 0, eval_every: int = 10,
-             deg_cap: Optional[int] = None, mesh=None) -> dict:
+             deg_cap: Optional[int] = None, mesh=None,
+             batch_fn: Optional[Callable] = None) -> dict:
     """VQ-GNN training (Alg. 1).
 
     Node-task training runs on the device-resident epoch executor by
@@ -175,11 +167,16 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
     is one ``vq_train_epoch`` call (``lax.scan`` over the stacked batches,
     DESIGN.md section 9).  ``REPRO_EPOCH_EXECUTOR=0`` falls back to the
     host-driven per-step loop (debugging; also the link-task path, whose
-    per-batch pair mining is host-side).  Both paths consume one
-    ``rng.permutation`` per epoch and traverse identical wrap-padded
-    batches (``epoch_slices``), so they match numerically on a fixed seed.
+    per-batch pair mining is host-side).  Both paths consume identical
+    wrap-padded batches from the same rng stream, so they match
+    numerically on a fixed seed.
     ``mesh`` (optional, a 1-axis "data" ``Mesh``) runs the epoch under
     ``shard_map`` data parallelism (``vq_train_epoch_dp``).
+    ``batch_fn`` (optional, node task) overrides the per-epoch batch
+    construction: ``batch_fn(rng) -> (ids [S, b'], slot_mask [S, b'])``
+    with distinct ids per row -- the hook the VQ/sampling hybrid uses to
+    feed sampler-expanded batches through the unchanged executor
+    (``train_hybrid``, DESIGN.md section 12).
     """
     ops = full_operands(g)
     x = jnp.asarray(g.features)
@@ -194,6 +191,14 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
 
     use_epoch = (cfg.task == "node"
                  and os.environ.get("REPRO_EPOCH_EXECUTOR", "1") != "0")
+    if batch_fn is not None and cfg.task != "node":
+        raise ValueError("batch_fn= is a node-task batch-construction "
+                         "hook (link pair mining is per-batch host work)")
+    if batch_fn is not None and mesh is not None:
+        # the dp path's per-shard split assumes the fixed epoch_slices
+        # batch width; sampler-widened rows would break its divisibility
+        # contract silently
+        raise ValueError("batch_fn= and mesh= are mutually exclusive")
     if mesh is not None and not use_epoch:
         # never fall back to single-device training silently when the
         # caller explicitly asked for data parallelism
@@ -218,8 +223,9 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
     vq_errs = None
     for ep in range(epochs):
         if use_epoch:
-            ids, smask = epoch_slices(rng.permutation(np.arange(g.n)),
-                                      batch_size)
+            ids, smask = (batch_fn(rng) if batch_fn is not None else
+                          epoch_slices(rng.permutation(np.arange(g.n)),
+                                       batch_size))
             ids_d = jnp.asarray(ids.astype(np.int32))
             smask_d = jnp.asarray(smask)
             if mesh is not None:
@@ -232,38 +238,46 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
                     ops.degrees, cfg, opt)
             if errs.shape[0]:
                 vq_errs = errs[-1]
+        elif cfg.task == "node":
+            # host-driven per-step loop over the SAME batches the executor
+            # would scan (epoch_slices of one permutation draw, or the
+            # caller's batch_fn) -- numerically identical to the former
+            # minibatch_stream fallback, but batch_fn-aware so hybrid
+            # parity can be checked executor-off too
+            ids, smask = (batch_fn(rng) if batch_fn is not None else
+                          epoch_slices(rng.permutation(np.arange(g.n)),
+                                       batch_size))
+            for s in range(ids.shape[0]):
+                bidx = np.asarray(ids[s])
+                pack = make_pack(g, bidx, deg_cap, slot_mask=smask[s])
+                lm = train_mask[bidx] * np.asarray(smask[s])
+                params, vq, ost, loss, _, vq_errs = vq_train_step(
+                    params, vq, ost, pack, x[bidx], labels[bidx],
+                    ops.degrees, cfg, opt, loss_mask=jnp.asarray(lm))
         else:
+            # link task: per-batch pair mining stays host-side
             for pack in minibatch_stream(g, batch_size, rng,
                                          deg_cap=deg_cap):
                 bidx = np.asarray(pack.batch_ids)
-                kwargs = {}
-                if cfg.task == "link":
-                    # intra-batch positive pairs + random negatives, mined
-                    # over the REAL slots only: wrap-padded tail slots are
-                    # nodes already supervised earlier in the epoch
-                    # (MinibatchPack.slot_mask contract)
-                    slots = np.arange(len(bidx))
-                    if pack.slot_mask is not None:
-                        slots = slots[np.asarray(pack.slot_mask) > 0]
-                    inb = np.full(g.n, -1)
-                    inb[bidx[slots]] = slots
-                    e = g.train_edges
-                    sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
-                    pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
-                    if len(pos) < 2:
-                        pos = np.zeros((2, 2), np.int64)
-                    neg = slots[rng.integers(0, len(slots), pos.shape)]
-                    kwargs = {"pos_pairs": jnp.asarray(pos),
-                              "neg_pairs": jnp.asarray(neg)}
-                else:
-                    lm = train_mask[bidx]
-                    if pack.slot_mask is not None:
-                        # wrap-padded tail slots carry no loss
-                        lm = lm * np.asarray(pack.slot_mask)
-                    kwargs = {"loss_mask": jnp.asarray(lm)}
+                # intra-batch positive pairs + random negatives, mined
+                # over the REAL slots only: wrap-padded tail slots are
+                # nodes already supervised earlier in the epoch
+                # (MinibatchPack.slot_mask contract)
+                slots = np.arange(len(bidx))
+                if pack.slot_mask is not None:
+                    slots = slots[np.asarray(pack.slot_mask) > 0]
+                inb = np.full(g.n, -1)
+                inb[bidx[slots]] = slots
+                e = g.train_edges
+                sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
+                pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
+                if len(pos) < 2:
+                    pos = np.zeros((2, 2), np.int64)
+                neg = slots[rng.integers(0, len(slots), pos.shape)]
                 params, vq, ost, loss, _, vq_errs = vq_train_step(
                     params, vq, ost, pack, x[bidx], labels[bidx],
-                    ops.degrees, cfg, opt, **kwargs)
+                    ops.degrees, cfg, opt, pos_pairs=jnp.asarray(pos),
+                    neg_pairs=jnp.asarray(neg))
         if (ep + 1) % eval_every == 0 or ep == epochs - 1:
             m = _evaluate(params, g, cfg, x, ops)
             # whitened-space VQ relative error of the last batch, emitted by
@@ -291,77 +305,195 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
 def train_sampler(g: Graph, cfg: GNNConfig, method: str, *, epochs: int,
                   batch_size: int, lr: float = 1e-3, seed: int = 0,
                   eval_every: int = 10, fanout: int = 5,
-                  walk_length: int = 3, n_parts: int = 32) -> dict:
-    """method in {ns-sage, cluster-gcn, graphsaint-rw}."""
+                  walk_length: int = 3, n_parts: int = 32,
+                  fanouts: Optional[list] = None,
+                  parts_per_batch: Optional[int] = None) -> dict:
+    """Sampling-baseline training; ``method`` in ``SAMPLER_METHODS``
+    (ns-sage / labor / cluster-gcn / graphsaint-rw).
+
+    Every epoch is pre-sampled on host into ONE batch list
+    (``sample_epoch``), then by default runs on the device-resident
+    sampler epoch executor: ``pack_sampler_epoch`` stacks the induced
+    subgraphs into a padded [S, P, ...] plan and
+    ``models.gnn.sampler_train_epoch`` scans the exact-subgraph step over
+    it -- the same pack-once/``lax.scan`` regime VQ training rides, so the
+    paper's Table 2/4 comparison is executor-vs-executor (DESIGN.md
+    section 12).  ``REPRO_SAMPLER_EXECUTOR=0`` falls back to the per-batch
+    host loop (debugging; also the link-task path, whose pair mining is
+    host-side).  Both paths consume the SAME pre-sampled batches for a
+    fixed seed, and padding rows are message- and loss-neutral (empty
+    neighbor lists, loss weight 0 under the masked-mean loss), so they
+    match numerically.
+
+    ``fanouts`` (per-layer list) overrides the uniform ``fanout``;
+    ``parts_per_batch`` overrides the Cluster-GCN default
+    ``max(1, n_parts // 8)``.
+    """
+    if method not in SAMPLER_METHODS:
+        raise ValueError(f"unknown sampler {method!r}; expected one of "
+                         f"{SAMPLER_METHODS}")
     ops = full_operands(g)
     x = jnp.asarray(g.features)
     labels_np = g.labels
+    labels = jnp.asarray(labels_np)
     params = init_gnn(jax.random.PRNGKey(seed), cfg)
     opt = adam(lr)
     ost = opt.init(params)
     rng = np.random.default_rng(seed)
     part = partition_graph(g, n_parts, rng) if method == "cluster-gcn" \
         else None
+    fanouts = list(fanouts) if fanouts is not None \
+        else [fanout] * cfg.n_layers
+    ppb = parts_per_batch if parts_per_batch is not None \
+        else max(1, n_parts // 8)
     deg_cap = g.max_degree()
+    use_exec = (cfg.task == "node"
+                and os.environ.get("REPRO_SAMPLER_EXECUTOR", "1") != "0")
     hist, t0 = [], time.time()
+    losses_tr: list = []
     max_sub, max_msg = 0, 0
     max_pairs = 4096
 
     for ep in range(epochs):
-        if method == "ns-sage":
-            it = ns_sage_batches(g, batch_size, [fanout] * cfg.n_layers,
-                                 rng, g.train_idx)
-        elif method == "cluster-gcn":
-            it = cluster_gcn_batches(g, part, max(1, n_parts // 8), rng)
-        elif method == "graphsaint-rw":
-            it = graphsaint_rw_batches(g, batch_size, walk_length, rng,
-                                       g.train_idx)
-        else:
-            raise ValueError(method)
-        for src, dst, nodes, seed_pos in it:
-            n_real = len(nodes)
-            n_pad = _pad_bucket(n_real)
-            sub_ops = subgraph_operands(src, dst, n_pad, deg_cap)
-            xs = jnp.zeros((n_pad, g.f), jnp.float32
-                           ).at[:n_real].set(x[nodes])
-            lpad = np.zeros((n_pad,) + labels_np.shape[1:],
-                            labels_np.dtype)
-            lpad[:n_real] = labels_np[nodes]
-            ls = jnp.asarray(lpad)
-            mask = np.zeros(n_pad, np.float32)
-            mask[seed_pos] = 1.0
-            if cfg.task == "link":
-                inb = np.full(g.n, -1)
-                inb[nodes] = np.arange(n_real)
-                e = g.train_edges
-                sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
-                pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
-                if len(pos) < 2:
-                    continue
-                pos = pos[:max_pairs]
-                pmask = np.zeros(max_pairs, np.float32)
-                pmask[:len(pos)] = 1.0
-                pos = np.concatenate(
-                    [pos, np.zeros((max_pairs - len(pos), 2), np.int64)])
-                neg = rng.integers(0, n_real, pos.shape)
-                params, ost, loss = full_train_step(
-                    params, ost, xs, sub_ops, ls, jnp.asarray(mask), cfg,
-                    opt, neg_pairs=jnp.asarray(neg),
-                    pos_pairs=jnp.asarray(pos),
-                    pair_mask=jnp.asarray(pmask))
-            else:
-                params, ost, loss = full_train_step(
-                    params, ost, xs, sub_ops, ls, jnp.asarray(mask),
-                    cfg, opt)
-            max_sub = max(max_sub, n_real)
+        batches = sample_epoch(g, method, batch_size=batch_size, rng=rng,
+                               fanouts=fanouts, walk_length=walk_length,
+                               partition=part, parts_per_batch=ppb)
+        for src, _, nodes, _, _ in batches:
+            max_sub = max(max_sub, len(nodes))
             max_msg = max(max_msg, len(src))
+        if use_exec:
+            splan = pack_sampler_epoch(batches, deg_cap)
+            params, ost, losses = sampler_train_epoch(
+                params, ost, splan, x, labels, cfg, opt)
+            losses_tr.append(np.asarray(losses))
+        else:
+            ep_losses = []
+            for src, dst, nodes, seed_pos, seed_w in batches:
+                n_real = len(nodes)
+                n_pad = _pad_bucket(n_real)
+                sub_ops = subgraph_operands(src, dst, n_pad, deg_cap)
+                xs = jnp.zeros((n_pad, g.f), jnp.float32
+                               ).at[:n_real].set(x[nodes])
+                lpad = np.zeros((n_pad,) + labels_np.shape[1:],
+                                labels_np.dtype)
+                lpad[:n_real] = labels_np[nodes]
+                ls = jnp.asarray(lpad)
+                mask = np.zeros(n_pad, np.float32)
+                mask[seed_pos] = seed_w
+                if cfg.task == "link":
+                    inb = np.full(g.n, -1)
+                    inb[nodes] = np.arange(n_real)
+                    e = g.train_edges
+                    sel = (inb[e[:, 0]] >= 0) & (inb[e[:, 1]] >= 0)
+                    pos = np.stack([inb[e[sel, 0]], inb[e[sel, 1]]], 1)
+                    if len(pos) < 2:
+                        continue
+                    pos = pos[:max_pairs]
+                    pmask = np.zeros(max_pairs, np.float32)
+                    pmask[:len(pos)] = 1.0
+                    pos = np.concatenate(
+                        [pos,
+                         np.zeros((max_pairs - len(pos), 2), np.int64)])
+                    neg = rng.integers(0, n_real, pos.shape)
+                    params, ost, loss = full_train_step(
+                        params, ost, xs, sub_ops, ls, jnp.asarray(mask),
+                        cfg, opt, neg_pairs=jnp.asarray(neg),
+                        pos_pairs=jnp.asarray(pos),
+                        pair_mask=jnp.asarray(pmask))
+                else:
+                    params, ost, loss = full_train_step(
+                        params, ost, xs, sub_ops, ls, jnp.asarray(mask),
+                        cfg, opt)
+                ep_losses.append(float(loss))
+            losses_tr.append(np.asarray(ep_losses, np.float32))
         if (ep + 1) % eval_every == 0 or ep == epochs - 1:
             m = _evaluate(params, g, cfg, x, ops)
             hist.append({"epoch": ep + 1, "time": time.time() - t0, **m})
     return {"history": hist, "final": hist[-1], "params": params,
+            "losses": losses_tr,
             "mem_bytes": subgraph_batch_bytes(max_sub, max_msg, cfg.hidden,
                                               cfg.n_layers),
             "messages": max_msg * cfg.n_layers}
+
+
+def train_hybrid(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
+                 lr: float = 3e-3, seed: int = 0, eval_every: int = 10,
+                 deg_cap: Optional[int] = None, fanout: int = 5,
+                 fanouts: Optional[list] = None,
+                 n_ctx: Optional[int] = None) -> dict:
+    """VQ/sampling hybrid (Message Invariance, DESIGN.md section 12):
+    LABOR-expanded batches on the UNCHANGED VQ executor.
+
+    Each batch is ``batch_size`` loss-bearing seeds plus up to ``n_ctx``
+    of their sampled neighbors as loss-masked context slots
+    (``hybrid_epoch_batches``).  No model change is involved: ``vq_apply``
+    already routes messages from in-batch neighbors through the exact
+    intra-batch SpMM (``nbr_pos >= 0``) and only the remaining
+    out-of-batch term through the codeword context kernel, so widening the
+    batch with sampled neighbors converts exactly those messages from
+    VQ-approximated to exact.  ``n_ctx=0`` degenerates to plain VQ
+    training bit-for-bit; ``n_ctx >= n - batch_size`` makes every message
+    exact (the full-graph regime at batch granularity).
+    """
+    if cfg.task != "node":
+        raise ValueError("train_hybrid is node-task only (the hybrid is a "
+                         "batch-construction strategy for Alg. 1)")
+    fo = list(fanouts) if fanouts is not None else [fanout] * cfg.n_layers
+    return train_vq(
+        g, cfg, epochs=epochs, batch_size=batch_size, lr=lr, seed=seed,
+        eval_every=eval_every, deg_cap=deg_cap,
+        batch_fn=lambda rng: hybrid_epoch_batches(g, batch_size, fo, rng,
+                                                  n_ctx=n_ctx))
+
+
+SCALE_METHODS = ("full", "vq", "ns_sage", "labor", "cluster", "saint",
+                 "hybrid")
+
+_SAMPLER_OF = {"ns_sage": "ns-sage", "labor": "labor",
+               "cluster": "cluster-gcn", "saint": "graphsaint-rw"}
+
+
+def train_scenario(g: Graph, cfg: GNNConfig, method: Optional[str] = None,
+                   *, epochs: int, batch_size: int, seed: int = 0,
+                   eval_every: int = 10, lr: Optional[float] = None,
+                   **knobs) -> dict:
+    """One front for every scale method of the scenario matrix.
+
+    ``method`` is one of ``SCALE_METHODS`` (full / vq / ns_sage / labor /
+    cluster / saint / hybrid); when None it comes from the
+    ``REPRO_SCALE_METHOD`` env knob (default "vq").  Per-method tuning
+    knobs are read from the environment when not passed explicitly:
+    ``REPRO_SAMPLER_FANOUT``, ``REPRO_WALK_LENGTH``, ``REPRO_N_PARTS``,
+    ``REPRO_HYBRID_CTX``.  Extra ``knobs`` are forwarded to the
+    underlying trainer.
+    """
+    method = method or os.environ.get("REPRO_SCALE_METHOD", "vq")
+    if method not in SCALE_METHODS:
+        raise ValueError(f"unknown scale method {method!r}; expected one "
+                         f"of {SCALE_METHODS}")
+
+    def env_int(name, default):
+        return int(os.environ.get(name, default))
+
+    if method == "full":
+        return train_full(g, cfg, epochs=epochs, lr=lr or 1e-2, seed=seed,
+                          eval_every=eval_every, **knobs)
+    if method == "vq":
+        return train_vq(g, cfg, epochs=epochs, batch_size=batch_size,
+                        lr=lr or 3e-3, seed=seed, eval_every=eval_every,
+                        **knobs)
+    if method == "hybrid":
+        knobs.setdefault("fanout", env_int("REPRO_SAMPLER_FANOUT", 5))
+        knobs.setdefault("n_ctx", env_int("REPRO_HYBRID_CTX", batch_size))
+        return train_hybrid(g, cfg, epochs=epochs, batch_size=batch_size,
+                            lr=lr or 3e-3, seed=seed,
+                            eval_every=eval_every, **knobs)
+    knobs.setdefault("fanout", env_int("REPRO_SAMPLER_FANOUT", 5))
+    knobs.setdefault("walk_length", env_int("REPRO_WALK_LENGTH", 3))
+    knobs.setdefault("n_parts", env_int("REPRO_N_PARTS", 32))
+    return train_sampler(g, cfg, _SAMPLER_OF[method], epochs=epochs,
+                         batch_size=batch_size, lr=lr or 1e-3, seed=seed,
+                         eval_every=eval_every, **knobs)
 
 
 # ---------------------------------------------------------------------------

@@ -65,18 +65,20 @@ def test_inductive_view_hides_test_nodes():
 def test_samplers_produce_valid_subgraphs():
     g = synthetic_arxiv(n=400, seed=0)
     rng = np.random.default_rng(0)
-    for src, dst, nodes, seeds in ns_sage_batches(g, 32, [5, 5], rng,
-                                                  g.train_idx):
+    for src, dst, nodes, seed_pos, seed_w in ns_sage_batches(
+            g, 32, [5, 5], rng, g.train_idx):
         assert (src < len(nodes)).all() and (dst < len(nodes)).all()
-        assert len(seeds) == 32
+        assert len(seed_pos) == 32 and len(seed_w) == 32
+        assert (seed_pos < len(nodes)).all()
         break
     part = partition_graph(g, 8, rng)
     assert part.min() >= 0 and part.max() < 8
-    for src, dst, nodes, seeds in cluster_gcn_batches(g, part, 2, rng):
+    for src, dst, nodes, seed_pos, seed_w in cluster_gcn_batches(
+            g, part, 2, rng):
         assert len(nodes) > 0
         break
-    for src, dst, nodes, seeds in graphsaint_rw_batches(g, 64, 3, rng,
-                                                        g.train_idx):
+    for src, dst, nodes, seed_pos, seed_w in graphsaint_rw_batches(
+            g, 64, 3, rng, g.train_idx):
         assert len(nodes) >= 64
         break
 
