@@ -40,11 +40,14 @@ from repro.core.message_passing import (ConvOperands, approx_message_passing,
                                         context_messages_reconstruct,
                                         inject_context_grad_materialized,
                                         intra_messages, reconstruct)
+from repro.distributed.quantization import quantize_codewords
 from repro.kernels import ops, ref
 from repro.kernels.context_ell import context_ell_pallas
 
 _FWD_GATE = {"fused_over_loop": 1.0 / 1.5}   # fused must be >= 1.5x
 _RES_GATE = {"residual_ratio": 0.5}          # streaming residual <= 0.5x
+_INT8_GATE = {"int8_over_fp32": 1.0 / 1.3}   # int8 path must be >= 1.3x
+_MEM_GATE = {"int8_operand_ratio": 0.5}      # int8 operand bytes <= 0.5x
 
 
 def _context_case(b, deg, n, nb, k, f_blk, seed=0):
@@ -158,6 +161,67 @@ def run_structured() -> list[dict]:
                    {"us_fused": us_fused, "us_loop_jit": us_loop_jit,
                     "fused_over_loop_jit":
                         us_fused / max(us_loop_jit, 1e-9)})
+
+    # --- int8 operand path (DESIGN.md section 13).  Parity first: the
+    # int8 fused kernel (uint8 assignment + int8 codewords + epilogue
+    # dequant) vs the oracle on the DEQUANTIZED tables -- the kernel must
+    # reproduce its own quantization grid exactly, so the gate is a tight
+    # kernel-correctness bound, not a loose quantization-error bound ---
+    ids, val, assign, cw = _context_case(512, 8, 5000, 4, 256, 8)
+    qcw = quantize_codewords(cw)
+    deq = qcw.q.astype(jnp.float32) * qcw.scale
+    ua = assign.astype(jnp.uint8)
+    got = context_ell_pallas(ids, val, ua, qcw.q, cw_scale=qcw.scale,
+                             interpret=True)
+    want = ref.context_ell(ids, val, assign, deq)
+    us = _time(lambda a, b_, c, d, e: context_ell_pallas(
+        a, b_, c, d, cw_scale=e, interpret=True), ids, val, ua, qcw.q,
+        qcw.scale)
+    _entry(rows, "context/int8_kernel_parity/512x8_nb4_k256", us,
+           {"maxerr": float(jnp.abs(got - want).max())},
+           tolerance={"maxerr": 1e-3})
+    w_t8 = jax.random.normal(jax.random.PRNGKey(9), (4 * 8, 32))
+    got = context_ell_pallas(ids, val, ua, qcw.q, cw_scale=qcw.scale,
+                             w_t=w_t8, interpret=True)
+    want = ref.context_ell(ids, val, assign, deq, w_t8)
+    _entry(rows, "context/int8_kernel_parity_wt/512x8_nb4_k256", 0.0,
+           {"maxerr": float(jnp.abs(got - want).max())},
+           tolerance={"maxerr": 1e-3})
+
+    # --- the ISSUE 7 serving-shape gate: int8 operands vs the fp32 path
+    # at the VMEM-envelope crossover.  With a 1 MiB dispatch budget the
+    # fp32 [4, 100k] int32 assignment table (1.6 MiB) exceeds the fused
+    # kernel's envelope -> the dispatch layer takes the eager per-branch
+    # loop; the uint8 table (0.4 MiB) still fits -> ONE fused dispatch.
+    # That dispatch-regime difference IS the int8 claim (the table is the
+    # envelope lever), and it is exactly what ``context_ell_variant``
+    # decides on a real TPU -- the bench times each regime's op-dispatch
+    # cost (the existing fused_vs_loop convention: dispatch-level, eager
+    # loop vs single fused call; within one jit the forms converge on CPU)
+    b, deg, n, nb, k, f_blk = 4096, 16, 100_000, 4, 256, 8
+    ids, val, assign, cw = _context_case(b, deg, n, nb, k, f_blk)
+    qcw = quantize_codewords(cw)
+    ua = assign.astype(jnp.uint8)
+    ops.configure_context_dispatch(reset=True, vmem_budget_mb=1.0)
+    v32 = ops.context_ell_variant(n, nb, assign.dtype.itemsize)
+    v8 = ops.context_ell_variant(n, nb, ua.dtype.itemsize)
+    assert v32 == "loop" and v8 == "fused", (v32, v8)
+    us_fp32 = _time(_legacy_loop, ids, val, assign, cw)
+    us_int8 = _time(ops.context_ell, ids, val, ua, qcw)
+    ops.configure_context_dispatch(reset=True)
+    fp32_bytes = assign.size * 4 + cw.size * 4
+    int8_bytes = ua.size + qcw.q.size + qcw.scale.size * 4
+    _entry(rows, f"context/int8_vs_fp32_dispatch/nb{nb}_k{k}_b{b}", us_int8,
+           {"us_int8": us_int8, "us_fp32": us_fp32,
+            "speedup": us_fp32 / max(us_int8, 1e-9),
+            "int8_over_fp32": us_int8 / max(us_fp32, 1e-9),
+            "fp32_variant_at_1mb": 1.0 if v32 == "loop" else 0.0,
+            "int8_variant_at_1mb": 0.0 if v8 == "fused" else 1.0},
+           tolerance=_INT8_GATE)
+    _entry(rows, f"context/int8_operand_bytes/nb{nb}_k{k}_n100k", 0.0,
+           {"fp32_mb": fp32_bytes / 2**20, "int8_mb": int8_bytes / 2**20,
+            "int8_operand_ratio": int8_bytes / fp32_bytes},
+           tolerance=_MEM_GATE)
 
     # --- streaming vs materialized Eq. 7 backward: wall time of the full
     # jitted value_and_grad, plus the MEASURED vjp residual bytes (what the

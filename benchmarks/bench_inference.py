@@ -29,12 +29,15 @@ from repro.graph.batching import (build_epoch_plan, full_operands,
                                   inference_slices)
 from repro.graph.datasets import synthetic_arxiv
 from repro.models.gnn import (GNNConfig, full_predict, init_gnn,
-                              init_vq_states, node_metric, vq_infer_epoch)
+                              init_vq_states, node_metric,
+                              quantize_vq_states, vq_infer_epoch)
 from repro.train.gnn_trainer import (eager_inference_loop, train_vq,
                                      vq_inference)
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "1") == "1"
 _GATE = {"executor_over_eager": 0.5}   # executor >= 2x the eager loop
+_INT8_GATE = {"int8_acc_drop": 0.02}   # int8 serving parity (ISSUE 7)
+_MEM_GATE = {"int8_state_ratio": 0.5}  # quantized operands <= half fp32
 
 
 def _executor_vs_eager_rows(rows: list, n: int, batch: int, hidden: int,
@@ -114,6 +117,34 @@ def run_structured() -> list[dict]:
     _entry(rows, "inference/full_graph", t_full * 1e6, {"acc": acc_exact})
     _entry(rows, "inference/vq_minibatch", t_vq * 1e6,
            {"acc": acc_vq, "agreement": agree})
+
+    # --- int8 serving path: the same trained model with quantized VQ
+    # operands (uint8 assignment + int8 codeword snapshots, DESIGN.md
+    # section 13).  Gated on accuracy parity vs the fp32 VQ inference and
+    # on the state-bytes ratio (the VMEM-envelope win the int8 path buys).
+    vq8 = quantize_vq_states(vq, cfg)
+    t0 = time.time()
+    approx8 = vq_inference(params, vq8, g, cfg, batch_size=400)
+    t_vq8 = time.time() - t0
+    acc8 = float(node_metric(jnp.asarray(approx8)[g.val_idx],
+                             labels[g.val_idx], False))
+    agree8 = float((np.argmax(approx, -1) ==
+                    np.argmax(np.asarray(approx8), -1)).mean())
+    fp32_b = int8_b = 0
+    for st in vq8:
+        fp32_b += st.assignment.size * 4            # int32 table
+        int8_b += st.assignment.size                # uint8 table
+        for qt in (st.qcw.feat, st.qcw.grad):
+            fp32_b += qt.q.size * 4                 # dense f32 codewords
+            int8_b += qt.q.size + qt.scale.size * 4
+    _entry(rows, "inference/int8_vq_minibatch", t_vq8 * 1e6,
+           {"acc": acc8, "agreement_vs_fp32": agree8,
+            "int8_acc_drop": max(0.0, acc_vq - acc8)},
+           tolerance=_INT8_GATE)
+    _entry(rows, "inference/int8_state_bytes", 0.0,
+           {"fp32_bytes": fp32_b, "int8_bytes": int8_b,
+            "int8_state_ratio": int8_b / fp32_b},
+           tolerance=_MEM_GATE)
     return rows
 
 

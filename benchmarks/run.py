@@ -52,8 +52,50 @@ def run_suite_inline(name: str) -> None:
         print(",".join(str(x) for x in row))
 
 
-def run_suite_structured(name: str, json_path: str | None,
-                         check: bool) -> None:
+def baseline_failures(rows, baseline: dict, *, rel: float = 1.2,
+                      floor: float = 0.05, slack: float = 0.02) -> list[str]:
+    """Gated metrics regressed >(rel - 1) against a committed baseline.
+
+    The bench-trend gate: every *tolerance-bearing* metric (the CI-gated
+    ratios/parity deltas, all "smaller is better" by the ``_entry``
+    convention) is compared row-by-name against ``baseline`` (a prior
+    BENCH_*.json).  A metric regresses iff the current value exceeds the
+    baseline by BOTH the relative factor ``rel`` AND the absolute margin
+    ``slack``, AND has consumed more than half its headroom to the hard
+    tolerance -- timing ratios deep inside the safe region jitter ~2x
+    run-to-run on shared CI hosts, so a trend alarm only means something
+    once the metric is actually approaching its gate.  Baselines below
+    ``floor`` are skipped for the same reason (any multiple of noise is
+    still noise).  Rows absent from the baseline (new benches) never
+    fail -- they start the trend.
+    """
+    base_rows = {r.get("name"): r for r in baseline.get("rows", [])}
+    out = []
+    for r in rows:
+        tol = r.get("tolerance") or {}
+        base = base_rows.get(r.get("name"))
+        if not tol or base is None:
+            continue
+        bmet = base.get("metrics") or {}
+        for m in tol:
+            cur_v, base_v = (r.get("metrics") or {}).get(m), bmet.get(m)
+            if cur_v is None or base_v is None:
+                continue
+            cur_v, base_v = float(cur_v), float(base_v)
+            if base_v < floor:
+                continue
+            try:
+                half_gate = float(tol[m]) / 2.0
+            except (TypeError, ValueError):
+                half_gate = 0.0
+            if cur_v > base_v * rel and cur_v > base_v + slack \
+                    and cur_v > half_gate:
+                out.append(f"{r['name']}:{m} {base_v:.4g}->{cur_v:.4g}")
+    return out
+
+
+def run_suite_structured(name: str, json_path: str | None, check: bool,
+                         baseline_path: str | None = None) -> None:
     import importlib
     mod = importlib.import_module(f"benchmarks.bench_{name}")
     if hasattr(mod, "run_structured"):
@@ -62,10 +104,14 @@ def run_suite_structured(name: str, json_path: str | None,
         rows = [{"name": n, "us_per_call": us, "metrics": {"derived": d},
                  "tolerance": None, "pass": True} for n, us, d in mod.run()]
     failures = [r["name"] for r in rows if not r.get("pass", True)]
+    trend = []
+    if baseline_path:
+        with open(baseline_path) as f:
+            trend = baseline_failures(rows, json.load(f))
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"suite": name, "rows": rows, "failures": failures},
-                      f, indent=2)
+            json.dump({"suite": name, "rows": rows, "failures": failures,
+                       "trend_failures": trend}, f, indent=2)
             f.write("\n")
     for r in rows:
         status = "ok" if r.get("pass", True) else "PARITY_FAIL"
@@ -73,13 +119,21 @@ def run_suite_structured(name: str, json_path: str | None,
     if failures:
         sys.stderr.write(
             f"{len(failures)} row(s) out of tolerance: {failures}\n")
-        if check:
-            raise SystemExit(1)
+    if trend:
+        # passing --baseline IS opting into the trend gate: fail even
+        # without --check (gate flags must never fail open)
+        sys.stderr.write(
+            f"{len(trend)} gated metric(s) regressed >20% vs "
+            f"{baseline_path}: {trend}\n")
+        raise SystemExit(1)
+    if failures and check:
+        raise SystemExit(1)
 
 
 def main() -> None:
     argv = sys.argv[1:]
     json_path = None
+    baseline_path = None
     check = False
     if "--json" in argv:
         i = argv.index("--json")
@@ -87,17 +141,26 @@ def main() -> None:
             raise SystemExit("--json requires a path operand")
         json_path = argv[i + 1]
         del argv[i:i + 2]
+    if "--baseline" in argv:
+        i = argv.index("--baseline")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            raise SystemExit("--baseline requires a path operand")
+        baseline_path = argv[i + 1]
+        if not os.path.exists(baseline_path):
+            # fail closed: a moved/renamed snapshot must not skip the gate
+            raise SystemExit(f"--baseline {baseline_path}: no such file")
+        del argv[i:i + 2]
     if "--check" in argv:
         check = True
         argv.remove("--check")
-    if json_path or check:
+    if json_path or check or baseline_path:
         # gate flags must never fail open: a mistyped suite name has to be
         # a hard error, not a silent fall-through to the run-all path
         if len(argv) != 1 or argv[0] not in SUITES:
             raise SystemExit(
-                f"--json/--check require exactly one suite of {SUITES}, "
-                f"got {argv!r}")
-        run_suite_structured(argv[0], json_path, check)
+                f"--json/--check/--baseline require exactly one suite of "
+                f"{SUITES}, got {argv!r}")
+        run_suite_structured(argv[0], json_path, check, baseline_path)
         return
     if argv and argv[0] in SUITES:
         run_suite_inline(argv[0])

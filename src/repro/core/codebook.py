@@ -32,6 +32,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import quantization
 from repro.kernels import ops as kops
 
 
@@ -182,6 +183,27 @@ def gradient_codewords(state: CodebookState, f_feat: int,
     n = state.n_branches
     fb = f_feat // n
     return _unwhitened_codewords(state, cfg.eps)[:, :, fb:]
+
+
+def quantized_codewords(state: CodebookState, f_feat: int,
+                        cfg: CodebookConfig, *,
+                        prev_feat: Optional[quantization.QTensor] = None,
+                        prev_grad: Optional[quantization.QTensor] = None
+                        ) -> tuple[quantization.QTensor, quantization.QTensor]:
+    """int8 kernel operands of the (feature, gradient) codeword tables.
+
+    The quantize-on-update hook of the int8 path (DESIGN.md section 13):
+    each table becomes a QTensor with per-branch/per-channel scales
+    ([nb, 1, f_blk], amax over the k codewords only) -- the exact layout
+    ``kops.context_ell`` dequantizes in one epilogue row.  Passing the
+    previous step's QTensors enables the drift-aware rescale: the
+    quantization grid is reused while the EMA step barely moves the table,
+    keeping serving-side int8 bytes stable across refreshes.
+    """
+    fcw = feature_codewords(state, f_feat, cfg)
+    gcw = gradient_codewords(state, f_feat, cfg)
+    return (quantization.quantize_codewords(fcw, prev=prev_feat),
+            quantization.quantize_codewords(gcw, prev=prev_grad))
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import codebook as cbm
 from repro.core.codebook import CodebookState, CodebookConfig
 from repro.core.message_passing import ConvOperands
+from repro.distributed.quantization import QTensor
+from repro.kernels import ops as kops
 from repro.kernels.spmm_ell_hbm import StripeIndex
 
 
@@ -51,11 +54,31 @@ class MinibatchPack(NamedTuple):
         return self.batch_ids.shape[0]
 
 
+class QuantizedCodewords(NamedTuple):
+    """int8 kernel-operand snapshot of a layer's codeword tables.
+
+    Each QTensor pairs [n_branches, k, f_blk] int8 values with
+    [n_branches, 1, f_blk] f32 per-branch/per-channel scales -- the layout
+    ``kops.context_ell`` consumes natively (DESIGN.md section 13).
+    """
+    feat: QTensor   # feature codewords X~ (Eq. 6 forward)
+    grad: QTensor   # gradient codewords G~ (Eq. 7 backward)
+
+
 class LayerVQState(NamedTuple):
-    """Per-layer streaming VQ state: codebook + global assignment table."""
+    """Per-layer streaming VQ state: codebook + global assignment table.
+
+    ``assignment`` is int32, or uint8 under the int8 operand precision
+    (k <= 256) -- the kernels accept either storage dtype.  ``qcw``, when
+    present, is the int8 snapshot of the codeword tables the layers feed
+    the context kernels instead of dense f32 slices; it is refreshed by
+    the codebook update (quantize-on-update) and preserved untouched by
+    assignment scatters.
+    """
     codebook: CodebookState
-    assignment: jax.Array  # [n_branches, n] int32  codeword id of every node
+    assignment: jax.Array  # [n_branches, n] int32|uint8 codeword id per node
     counts: jax.Array      # [n_branches, k] f32    histogram of `assignment`
+    qcw: Optional[QuantizedCodewords] = None
 
 
 def branch_histogram(ids: jax.Array, k: int,
@@ -90,8 +113,44 @@ def refresh_assignment(state: LayerVQState, batch_ids: jax.Array,
         jnp.concatenate([old, new_assign], axis=1), k,
         jnp.concatenate([jnp.full_like(old, -1, dtype=jnp.float32),
                          jnp.ones(new_assign.shape, jnp.float32)], axis=1))
-    assignment = state.assignment.at[:, batch_ids].set(new_assign)
-    return LayerVQState(state.codebook, assignment, state.counts + delta)
+    assignment = state.assignment.at[:, batch_ids].set(
+        new_assign.astype(state.assignment.dtype))
+    return LayerVQState(state.codebook, assignment, state.counts + delta,
+                        state.qcw)
+
+
+def assignment_dtype(cfg: CodebookConfig):
+    """Storage dtype of the global assignment table under the active
+    kernel precision: uint8 when int8 is on and k fits a byte (the 4x
+    VMEM-envelope win on the fused context kernel's resident table)."""
+    int8 = kops.kernel_precision() == "int8" and cfg.k <= 256
+    return jnp.uint8 if int8 else jnp.int32
+
+
+def quantize_layer_state(state: LayerVQState, f_feat: int,
+                         cfg: CodebookConfig) -> LayerVQState:
+    """(Re)build the int8 codeword snapshot from the current codebook,
+    reusing the previous snapshot's scales inside the drift band."""
+    prev = state.qcw
+    qf, qg = cbm.quantized_codewords(
+        state.codebook, f_feat, cfg,
+        prev_feat=None if prev is None else prev.feat,
+        prev_grad=None if prev is None else prev.grad)
+    return state._replace(qcw=QuantizedCodewords(qf, qg))
+
+
+def layer_codewords(vq: LayerVQState, f_feat: int, cfg: CodebookConfig, *,
+                    dense: bool = False):
+    """The (feature, gradient) codeword operands a layer feeds the context
+    kernels: the int8 QTensor snapshot when one is attached, else dense f32
+    slices.  ``dense=True`` forces f32 materialization -- GAT and the
+    Graph-Transformer mix branches through per-head weight maps, so their
+    math needs real tables, not kernel-side dequant epilogues.
+    """
+    if vq.qcw is not None and not dense:
+        return vq.qcw.feat, vq.qcw.grad
+    return (cbm.feature_codewords(vq.codebook, f_feat, cfg),
+            cbm.gradient_codewords(vq.codebook, f_feat, cfg))
 
 
 def init_layer_vq_state(key: jax.Array, n_nodes: int, f_feat: int,
@@ -99,10 +158,14 @@ def init_layer_vq_state(key: jax.Array, n_nodes: int, f_feat: int,
     from repro.core.codebook import init_codebook
     k_cb, k_assign = jax.random.split(key)
     cb = init_codebook(k_cb, f_feat, f_grad, cfg)
+    dtype = assignment_dtype(cfg)
     assignment = jax.random.randint(
-        k_assign, (cb.n_branches, n_nodes), 0, cfg.k).astype(jnp.int32)
+        k_assign, (cb.n_branches, n_nodes), 0, cfg.k).astype(dtype)
     counts = branch_histogram(assignment, cfg.k)
-    return LayerVQState(cb, assignment, counts)
+    state = LayerVQState(cb, assignment, counts)
+    if dtype == jnp.uint8:
+        state = quantize_layer_state(state, f_feat, cfg)
+    return state
 
 
 # ---------------------------------------------------------------------------

@@ -81,8 +81,9 @@ def _inject_bwd(res, g):
     w_t = None if w is None else w.astype(jnp.float32).T
     phantom = kops.context_ell(rev_ids, rev_vals, assignment,
                                grad_codewords, w_t)
+    # tree_map: grad_codewords may be a QTensor (int8 values + f32 scales)
     return (g + phantom.astype(g.dtype), jnp.zeros_like(rev_vals), None,
-            jnp.zeros_like(grad_codewords), None,
+            jax.tree_util.tree_map(jnp.zeros_like, grad_codewords), None,
             None if w is None else jnp.zeros_like(w))
 
 

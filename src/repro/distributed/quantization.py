@@ -38,6 +38,42 @@ def dequantize_tensor(t: QTensor, dtype=jnp.bfloat16) -> jax.Array:
     return (t.q.astype(jnp.float32) * t.scale).astype(dtype)
 
 
+# Drift band of the codeword-table requantization (kernels int8 path,
+# DESIGN.md section 13): the previous step's scale is reused while the new
+# amax stays within [prev_amax / drift, prev_amax], so the quantization grid
+# only moves when the codebook actually drifts -- stable grids keep the
+# serving-side int8 tables byte-identical across EMA steps that barely move.
+CODEWORD_SCALE_DRIFT = 1.25
+
+
+def quantize_codewords(cw: jax.Array,
+                       prev: "QTensor | None" = None,
+                       drift: float = CODEWORD_SCALE_DRIFT) -> QTensor:
+    """Per-branch/per-channel symmetric int8 for codeword tables.
+
+    cw: [n_branches, k, f_blk] -> QTensor(q int8 [nb, k, f_blk],
+    scale f32 [nb, 1, f_blk]): the amax reduces over the k codewords only,
+    so every (branch, channel) pair keeps its own scale -- the layout the
+    int8 context/SpMM kernels consume as a flat [1, nb * f_blk] epilogue
+    row (scales are k-independent, so the dequant multiply commutes with
+    the over-neighbors accumulate and runs once per output tile).
+
+    ``prev`` enables the drift-aware rescale (quantize-on-update): the
+    previous scale is kept wherever the new amax still fits its range and
+    has not shrunk below ``1/drift`` of it.  jit-friendly (``jnp.where``).
+    """
+    cw32 = cw.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(cw32), axis=-2, keepdims=True)   # [nb, 1, f_blk]
+    scale = amax / 127.0 + 1e-12
+    if prev is not None:
+        prev_amax = (prev.scale - 1e-12) * 127.0
+        keep = jnp.logical_and(amax <= prev_amax,
+                               amax >= prev_amax / drift)
+        scale = jnp.where(keep, prev.scale, scale)
+    q = jnp.clip(jnp.round(cw32 / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
 def _is_weight(leaf) -> bool:
     return hasattr(leaf, "ndim") and leaf.ndim >= 2 and \
         leaf.dtype in (jnp.float32, jnp.bfloat16)

@@ -30,6 +30,16 @@ computes ``sum_d rev_vals[:, d] * G~[c(rev_ids[:, d])]``, and the optional
 row tile), so ``inject_context_grad`` needs no ``[b, Dr, f_grad]``
 residual -- the codebook itself is the residual.
 
+Low-precision operands (DESIGN.md section 13): the codeword tables may be
+int8 with a per-branch/per-channel f32 scale (``cw_scale [nb, 1, f_blk]``,
+``distributed.quantization.quantize_codewords``) and the assignment table
+may be uint8 (k <= 256) -- both stay in their storage dtype inside VMEM
+(4x envelope win on the assignment table, the dispatch-budget lever), the
+accumulate runs in f32, and the dequant multiply is a single epilogue row
+``acc * scale_flat [1, nb * f_blk]``: scales are k-independent, so the
+multiply commutes with the over-neighbors sum and with the fused ``w_t``
+MXU epilogue ordering (scale first, then ``@ W^T``).
+
 Padding contract (shared with spmm_ell): slots with ``vals == 0`` may
 point at any valid node id; rows padded to the ``bb`` tile carry zero vals.
 """
@@ -52,7 +62,9 @@ def _accumulate(ids_ref, val_ref, assign_ref, cw_ref, *, deg: int, nb: int,
     def body(d, acc):
         ids = ids_ref[:, d]                                # [bb] int32
         vals = val_ref[:, d].astype(jnp.float32)           # [bb]
-        aid = assign_ref[ids, :] + offs                    # [bb, nb] flat rows
+        # assignment rides in its storage dtype (int32 or uint8); the id
+        # arithmetic widens in-register only
+        aid = assign_ref[ids, :].astype(jnp.int32) + offs  # [bb, nb] flat rows
         rows = cw_ref[aid.reshape(bb * nb), :]             # [bb*nb, f_blk]
         # row-major flatten: row (i*nb + beta) is branch beta of batch row i,
         # so this reshape IS the branch concat -- no moveaxis, no copy
@@ -82,17 +94,43 @@ def _context_ell_wt_kernel(ids_ref, val_ref, assign_ref, cw_ref, wt_ref,
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def _context_ell_q_kernel(ids_ref, val_ref, assign_ref, cw_ref, sc_ref,
+                          o_ref, *, deg: int, nb: int, k: int):
+    """int8 codewords: f32 accumulate + one dequant-row epilogue."""
+    bb = o_ref.shape[0]
+    acc = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
+                      deg=deg, nb=nb, k=k, bb=bb)
+    o_ref[...] = (acc * sc_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _context_ell_q_wt_kernel(ids_ref, val_ref, assign_ref, cw_ref, sc_ref,
+                             wt_ref, o_ref, *, deg: int, nb: int, k: int):
+    bb = o_ref.shape[0]
+    acc = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
+                      deg=deg, nb=nb, k=k, bb=bb)
+    acc = acc * sc_ref[...].astype(jnp.float32)   # dequant BEFORE the W^T mix
+    o_ref[...] = jax.lax.dot_general(
+        acc, wt_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bb", "interpret"))
 def context_ell_pallas(out_ids: jax.Array, out_vals: jax.Array,
                        assignment: jax.Array, codewords: jax.Array, *,
+                       cw_scale: Optional[jax.Array] = None,
                        w_t: Optional[jax.Array] = None,
                        bb: int = 128, interpret: bool = True) -> jax.Array:
     """Fused multi-branch codeword SpMM (one kernel for any n_branches).
 
     out_ids:    [b, D] int32  global node ids (padding: val == 0)
     out_vals:   [b, D]        edge values
-    assignment: [n_branches, n] int32  per-branch codeword id of every node
+    assignment: [n_branches, n] int32 or uint8 (k <= 256) codeword ids;
+                the table stays in its storage dtype inside VMEM
     codewords:  [n_branches, k, f_blk]  feature OR gradient codewords
+                (f32, or int8 when ``cw_scale`` is given)
+    cw_scale:   optional [n_branches, 1, f_blk] f32 per-branch/per-channel
+                dequant scales of int8 codewords (module docstring)
     w_t:        optional [n_branches * f_blk, f_out] fused epilogue matmul
 
     Returns [b, n_branches * f_blk] (branch-concatenated), or [b, f_out]
@@ -111,7 +149,10 @@ def context_ell_pallas(out_ids: jax.Array, out_vals: jax.Array,
         out_ids.astype(jnp.int32))
     val_p = jnp.zeros((bp, deg), jnp.float32).at[:b].set(
         out_vals.astype(jnp.float32))
-    assign_t = assignment.astype(jnp.int32).T          # [n, nb]
+    # uint8 assignment stays uint8 (the 4x VMEM-envelope win); everything
+    # else rides as int32
+    assign_t = assignment.T if assignment.dtype == jnp.uint8 \
+        else assignment.astype(jnp.int32).T            # [n, nb]
     cw_flat = codewords.reshape(nb * k, f_blk)
 
     n = assign_t.shape[0]
@@ -122,24 +163,33 @@ def context_ell_pallas(out_ids: jax.Array, out_vals: jax.Array,
         pl.BlockSpec((n, nb), lambda i: (0, 0)),
         pl.BlockSpec((nb * k, f_blk), lambda i: (0, 0)),
     ]
+    operands = [ids_p, val_p, assign_t, cw_flat]
+    if cw_scale is not None:
+        # [nb, 1, f_blk] -> the flat [1, nb * f_blk] epilogue row matching
+        # the accumulator's branch-major column layout
+        in_specs.append(pl.BlockSpec((1, f_cat), lambda i: (0, 0)))
+        operands.append(cw_scale.astype(jnp.float32).reshape(1, f_cat))
+        kern, kern_wt = _context_ell_q_kernel, _context_ell_q_wt_kernel
+    else:
+        kern, kern_wt = _context_ell_kernel, _context_ell_wt_kernel
     if w_t is None:
         out = pl.pallas_call(
-            functools.partial(_context_ell_kernel, **common),
+            functools.partial(kern, **common),
             grid=(bp // bb,),
             in_specs=in_specs,
             out_specs=pl.BlockSpec((bb, f_cat), lambda i: (i, 0)),
             out_shape=jax.ShapeDtypeStruct((bp, f_cat), jnp.float32),
             interpret=interpret,
-        )(ids_p, val_p, assign_t, cw_flat)
+        )(*operands)
     else:
         f_out = w_t.shape[1]
         out = pl.pallas_call(
-            functools.partial(_context_ell_wt_kernel, **common),
+            functools.partial(kern_wt, **common),
             grid=(bp // bb,),
             in_specs=in_specs + [
                 pl.BlockSpec((f_cat, f_out), lambda i: (0, 0))],
             out_specs=pl.BlockSpec((bb, f_out), lambda i: (i, 0)),
             out_shape=jax.ShapeDtypeStruct((bp, f_out), jnp.float32),
             interpret=interpret,
-        )(ids_p, val_p, assign_t, cw_flat, w_t.astype(jnp.float32))
+        )(*operands, w_t.astype(jnp.float32))
     return out[:b]

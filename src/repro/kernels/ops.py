@@ -33,7 +33,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.vq_assign import vq_assign_pallas
 from repro.kernels.vq_update import vq_assign_update_pallas
 from repro.kernels.context_ell import context_ell_pallas
@@ -41,12 +41,49 @@ from repro.kernels.spmm_ell import spmm_ell_pallas
 from repro.kernels.spmm_ell_hbm import StripeIndex, spmm_ell_hbm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.vq_attention import vq_attention_decode_pallas
+from repro.distributed.quantization import QTensor
 
 
 def _use_pallas() -> bool:
     if os.environ.get("REPRO_FORCE_PALLAS", "0") == "1":
         return True
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# kernel operand precision (fp32 vs int8 storage)
+# ---------------------------------------------------------------------------
+
+# The kernels themselves dispatch on OPERAND TYPE (QTensor codewords, uint8
+# assignment tables) so jitted callers never read the environment inside a
+# trace; this knob only steers the host-side state-construction sites
+# (core/conv.py init, models/gnn.py serving, launch/serve_gnn.py) that decide
+# which storage dtype to build.  DESIGN.md section 13.
+_PRECISIONS = ("fp32", "int8")
+_precision_override: list[str] = []
+
+
+def configure_kernel_precision(precision: Optional[str] = None, *,
+                               reset: bool = False) -> None:
+    """Programmatic override of REPRO_KERNEL_PRECISION ('fp32' | 'int8')."""
+    if reset:
+        _precision_override.clear()
+    if precision is not None:
+        if precision not in _PRECISIONS:
+            raise ValueError(
+                f"unknown kernel precision: {precision!r}; want fp32 or int8")
+        _precision_override[:] = [precision]
+
+
+def kernel_precision() -> str:
+    """Active operand-storage precision ('fp32' default)."""
+    if _precision_override:
+        return _precision_override[0]
+    p = os.environ.get("REPRO_KERNEL_PRECISION", "fp32")
+    if p not in _PRECISIONS:
+        raise ValueError(
+            f"REPRO_KERNEL_PRECISION={p!r}: want fp32 or int8")
+    return p
 
 
 def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
@@ -56,7 +93,8 @@ def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
     return ref.vq_assign(x, codewords)
 
 
-def vq_assign_update(x: jax.Array, codewords: jax.Array
+def vq_assign_update(x: jax.Array, codewords: jax.Array, *,
+                     emit_dtype=jnp.int32
                      ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused assign + cluster stats + per-row quantization error.
 
@@ -64,11 +102,20 @@ def vq_assign_update(x: jax.Array, codewords: jax.Array
     returns (assignment [b], qerr [b], counts [k], sums [k, f]) from a
     single distance computation.  TPU: kernels/vq_update.py (revisited
     VMEM accumulator blocks, no one-hot); CPU: scatter-add oracle.
+    ``emit_dtype=jnp.uint8`` (k <= 256) emits the assignment in the int8
+    path's storage dtype straight from the kernel.
     """
     if _use_pallas():
+        bb, kb = 256, 512
+        tuned = autotune.tuned_vq_update(x.shape[0], codewords.shape[0],
+                                         x.shape[1])
+        if tuned is not None:
+            bb, kb = tuned["bb"], tuned["kb"]
         return vq_assign_update_pallas(
-            x, codewords, interpret=jax.default_backend() != "tpu")
-    return ref.vq_assign_update(x, codewords)
+            x, codewords, bb=bb, kb=kb, emit_dtype=emit_dtype,
+            interpret=jax.default_backend() != "tpu")
+    idx, qerr, counts, sums = ref.vq_assign_update(x, codewords)
+    return idx.astype(emit_dtype), qerr, counts, sums
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +130,31 @@ _DEFAULT_VMEM_BUDGET_MB = 8.0
 # Programmatic overrides (take precedence over the environment) -- the
 # config-file hook for deployments that cannot set env vars per-process.
 _dispatch_overrides: dict[str, object] = {}
+
+
+def _vmem_budget_mb(overrides: dict, env_name: str) -> float:
+    """Resolve a dispatch VMEM budget: programmatic override > env > default.
+
+    The one shared parse/validate path for the SpMM dispatch, the context
+    dispatch, and the autotuner's heuristic fallback (previously copy-pasted
+    per consumer).
+    """
+    raw = overrides.get("vmem_budget_mb",
+                        os.environ.get(env_name, _DEFAULT_VMEM_BUDGET_MB))
+    try:
+        budget = float(raw)  # type: ignore[arg-type]
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{env_name}={raw!r}: want a positive float (MiB)") from None
+    if budget <= 0.0:
+        raise ValueError(f"{env_name}={raw!r}: want a positive float (MiB)")
+    return budget
+
+
+def _budget_forced(overrides: dict, env_name: str) -> bool:
+    """True when the budget was explicitly configured -- the autotuner then
+    stands down (env vars stay authoritative, DESIGN.md section 13)."""
+    return "vmem_budget_mb" in overrides or env_name in os.environ
 
 
 def configure_spmm_dispatch(variant: Optional[str] = None,
@@ -106,7 +178,12 @@ def configure_spmm_dispatch(variant: Optional[str] = None,
 
 
 def spmm_ell_variant(n_src: int, f: int, itemsize: int = 4) -> str:
-    """'resident' or 'hbm' for a [n_src, f] source matrix of `itemsize`."""
+    """'resident' or 'hbm' for a [n_src, f] source matrix of `itemsize`.
+
+    Precedence: forced variant (programmatic/env) > explicitly configured
+    VMEM budget > autotuner measurement (opt-in) > size heuristic against
+    the default budget.
+    """
     forced = _dispatch_overrides.get(
         "variant", os.environ.get("REPRO_SPMM_VARIANT", "auto"))
     if forced not in ("auto", "resident", "hbm"):
@@ -114,30 +191,49 @@ def spmm_ell_variant(n_src: int, f: int, itemsize: int = 4) -> str:
             f"REPRO_SPMM_VARIANT={forced!r}: want auto, resident or hbm")
     if forced in ("resident", "hbm"):
         return str(forced)
-    budget_mb = _dispatch_overrides.get(
-        "vmem_budget_mb",
-        float(os.environ.get("REPRO_SPMM_VMEM_BUDGET_MB",
-                             str(_DEFAULT_VMEM_BUDGET_MB))))
-    return "hbm" if n_src * f * itemsize > float(budget_mb) * 2 ** 20 \
+    if not _budget_forced(_dispatch_overrides, "REPRO_SPMM_VMEM_BUDGET_MB"):
+        tuned = autotune.tuned_spmm(n_src, f, itemsize)
+        if tuned is not None:
+            return str(tuned["variant"])
+    budget_mb = _vmem_budget_mb(_dispatch_overrides,
+                                "REPRO_SPMM_VMEM_BUDGET_MB")
+    return "hbm" if n_src * f * itemsize > budget_mb * 2 ** 20 \
         else "resident"
 
 
 def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
-             stripe_index: Optional[StripeIndex] = None) -> jax.Array:
+             stripe_index: Optional[StripeIndex] = None, *,
+             x_scale: Optional[jax.Array] = None) -> jax.Array:
     """ELLPACK SpMM with size-based resident/HBM variant dispatch.
 
     ``stripe_index`` (built at batch-pack time by
     ``repro.graph.batching.make_stripe_index``) is only consumed by the HBM
     variant; the resident kernel and the CPU oracle ignore it.
+
+    ``x`` may be a ``QTensor`` of int8 rows (or pass ``x_scale`` [1, f]
+    explicitly with an int8 ``x``): the resident kernel and the CPU oracle
+    consume the storage dtype natively with one dequant epilogue; the HBM
+    variant dequantizes up front (its VMEM pressure is already bounded by
+    the stripe, so the int8 win there is only DMA bytes -- TODO).
     """
+    if isinstance(x, QTensor):
+        x, x_scale = x.q, x.scale
     if _use_pallas():
         interpret = jax.default_backend() != "tpu"
         n_src, f = x.shape
+        bb = 128
+        tuned = autotune.tuned_spmm(n_src, f, x.dtype.itemsize)
+        if tuned is not None:
+            bb = int(tuned.get("bb", bb))
         if spmm_ell_variant(n_src, f, x.dtype.itemsize) == "hbm":
+            if x_scale is not None:
+                x = x.astype(jnp.float32) * \
+                    x_scale.astype(jnp.float32).reshape(1, -1)
             return spmm_ell_hbm_pallas(
                 nbr_idx, nbr_val, x, stripe_index, interpret=interpret)
-        return spmm_ell_pallas(nbr_idx, nbr_val, x, interpret=interpret)
-    return ref.spmm_ell(nbr_idx, nbr_val, x)
+        return spmm_ell_pallas(nbr_idx, nbr_val, x, x_scale=x_scale,
+                               bb=bb, interpret=interpret)
+    return ref.spmm_ell(nbr_idx, nbr_val, x, x_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -184,25 +280,32 @@ def context_ell_variant(n_nodes: int, n_branches: int,
             f"REPRO_CONTEXT_VARIANT={forced!r}: want auto, fused or loop")
     if forced in ("fused", "loop"):
         return str(forced)
-    budget_mb = _context_overrides.get(
-        "vmem_budget_mb",
-        float(os.environ.get("REPRO_CONTEXT_VMEM_BUDGET_MB",
-                             str(_DEFAULT_VMEM_BUDGET_MB))))
+    if not _budget_forced(_context_overrides, "REPRO_CONTEXT_VMEM_BUDGET_MB"):
+        tuned = autotune.tuned_context(n_nodes, n_branches, itemsize)
+        if tuned is not None:
+            return str(tuned["variant"])
+    budget_mb = _vmem_budget_mb(_context_overrides,
+                                "REPRO_CONTEXT_VMEM_BUDGET_MB")
     return "loop" if n_nodes * n_branches * itemsize \
-        > float(budget_mb) * 2 ** 20 else "fused"
+        > budget_mb * 2 ** 20 else "fused"
 
 
-def _context_ell_loop(out_ids, out_vals, assignment, codewords, w_t):
+def _context_ell_loop(out_ids, out_vals, assignment, codewords, w_t,
+                      cw_scale=None):
     """Per-branch fallback: assignment gather + one SpMM per branch.
 
     Used when the [n_branches, n] assignment table exceeds the fused
     kernel's VMEM envelope -- each branch's gather source is its tiny
     [k, f_blk] codeword table, so the per-branch SpMM always dispatches
-    to the resident variant regardless of graph size.
+    to the resident variant regardless of graph size.  int8 codewords ride
+    into each branch's SpMM with their [1, f_blk] scale row (per-branch
+    dequant before the concat == the fused kernel's flat epilogue).
     """
-    branch_ids = assignment[:, out_ids]                   # [nb, b, D]
-    per_branch = [spmm_ell(branch_ids[i], out_vals, codewords[i])
-                  for i in range(codewords.shape[0])]
+    branch_ids = assignment.astype(jnp.int32)[:, out_ids]  # [nb, b, D]
+    per_branch = [
+        spmm_ell(branch_ids[i], out_vals, codewords[i],
+                 x_scale=None if cw_scale is None else cw_scale[i])
+        for i in range(codewords.shape[0])]
     out = jnp.concatenate(per_branch, axis=-1)
     if w_t is not None:
         out = out.astype(jnp.float32) @ w_t.astype(jnp.float32)
@@ -216,7 +319,7 @@ _context_ell_ref = jax.jit(ref.context_ell)
 
 
 def context_ell(out_ids: jax.Array, out_vals: jax.Array,
-                assignment: jax.Array, codewords: jax.Array,
+                assignment: jax.Array, codewords,
                 w_t: Optional[jax.Array] = None) -> jax.Array:
     """Fused multi-branch VQ-context SpMM with size-based variant dispatch.
 
@@ -224,17 +327,30 @@ def context_ell(out_ids: jax.Array, out_vals: jax.Array,
     (feature codewords) and, with reverse-edge operands + gradient
     codewords (+ optional fused ``w_t`` epilogue), the streaming Eq. 7
     backward of ``inject_context_grad`` (DESIGN.md section 10).
+
+    The int8 path is data-driven (no env read under jit): pass ``codewords``
+    as a ``QTensor`` ([nb, k, f_blk] int8 + [nb, 1, f_blk] f32 scales) and
+    optionally a uint8 ``assignment`` (k <= 256) -- the operands stay in
+    storage dtype through every variant, with one f32 dequant epilogue.
     """
+    cw_scale = None
+    if isinstance(codewords, QTensor):
+        codewords, cw_scale = codewords.q, codewords.scale
     if _use_pallas():
         interpret = jax.default_backend() != "tpu"
         nb, n = assignment.shape
+        bb = 128
+        tuned = autotune.tuned_context(n, nb, assignment.dtype.itemsize)
+        if tuned is not None:
+            bb = int(tuned.get("bb", bb))
         if context_ell_variant(n, nb, assignment.dtype.itemsize) == "fused":
             return context_ell_pallas(out_ids, out_vals, assignment,
-                                      codewords, w_t=w_t,
-                                      interpret=interpret)
+                                      codewords, cw_scale=cw_scale, w_t=w_t,
+                                      bb=bb, interpret=interpret)
         return _context_ell_loop(out_ids, out_vals, assignment, codewords,
-                                 w_t)
-    return _context_ell_ref(out_ids, out_vals, assignment, codewords, w_t)
+                                 w_t, cw_scale)
+    return _context_ell_ref(out_ids, out_vals, assignment, codewords, w_t,
+                            cw_scale)
 
 
 def flash_attention(q, k, v, *, causal: bool = True):

@@ -43,26 +43,38 @@ def vq_assign_update(x: jax.Array, codewords: jax.Array
     return idx, qerr, counts, sums
 
 
-def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array) -> jax.Array:
+def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
+             x_scale: jax.Array | None = None) -> jax.Array:
     """Padded-neighbor (ELLPACK) sparse @ dense.
 
     nbr_idx: [b, D] int32 (padding entries may point anywhere, their val is 0)
     nbr_val: [b, D] float
-    x:       [n_src, f]
+    x:       [n_src, f] (int8 rows when ``x_scale`` is given)
+    x_scale: optional [1, f] f32 per-channel dequant scales; applied as one
+             epilogue multiply after the accumulate (row-independent scales
+             commute with the over-neighbors sum -- the kernels' contract)
     returns  [b, f] with out[i] = sum_d val[i,d] * x[idx[i,d]]
     """
     gathered = x[nbr_idx]                                  # [b, D, f]
-    return jnp.einsum('bd,bdf->bf', nbr_val.astype(jnp.float32),
-                      gathered.astype(jnp.float32))
+    out = jnp.einsum('bd,bdf->bf', nbr_val.astype(jnp.float32),
+                     gathered.astype(jnp.float32))
+    if x_scale is not None:
+        out = out * x_scale.astype(jnp.float32).reshape(1, -1)
+    return out
 
 
 def context_ell(out_ids: jax.Array, out_vals: jax.Array,
                 assignment: jax.Array, codewords: jax.Array,
-                w_t: jax.Array | None = None) -> jax.Array:
+                w_t: jax.Array | None = None,
+                cw_scale: jax.Array | None = None) -> jax.Array:
     """Multi-branch VQ-context SpMM oracle (kernels/context_ell.py).
 
     out_ids/out_vals: [b, D] (padding entries carry val == 0)
-    assignment: [n_branches, n] int32;  codewords: [n_branches, k, f_blk]
+    assignment: [n_branches, n] int32 (or uint8 storage, k <= 256)
+    codewords: [n_branches, k, f_blk] (int8 when ``cw_scale`` is given)
+    cw_scale: optional [n_branches, 1, f_blk] f32 per-branch/per-channel
+              dequant scales, applied as one epilogue row multiply (the
+              scales are k-independent -- same contract as the kernel)
     w_t: optional [n_branches * f_blk, f_out] fused epilogue matmul
 
     out[i] = sum_d val[i, d] * concat_beta cw[beta, assignment[beta, ids[i, d]]]
@@ -74,7 +86,7 @@ def context_ell(out_ids: jax.Array, out_vals: jax.Array,
     if out_ids.shape[1] == 0:
         f_out = nb * f_blk if w_t is None else w_t.shape[1]
         return jnp.zeros((b, f_out), jnp.float32)
-    branch_ids = assignment[:, out_ids]                    # [nb, b, D]
+    branch_ids = assignment.astype(jnp.int32)[:, out_ids]  # [nb, b, D]
     vals = out_vals.astype(jnp.float32)
     # per-branch gather + contraction inside ONE computation (the branch
     # loop is a trace-time unroll, and this shape compiles to faster XLA
@@ -83,6 +95,9 @@ def context_ell(out_ids: jax.Array, out_vals: jax.Array,
         [jnp.einsum('bd,bdf->bf', vals,
                     codewords[i].astype(jnp.float32)[branch_ids[i]])
          for i in range(nb)], axis=-1)
+    if cw_scale is not None:
+        # dequant AFTER the accumulate, BEFORE the W^T mix (kernel ordering)
+        out = out * cw_scale.astype(jnp.float32).reshape(1, nb * f_blk)
     if w_t is not None:
         out = out @ w_t.astype(jnp.float32)
     return out

@@ -16,6 +16,7 @@ ops.py).  The inner loop runs over the D neighbor slots, each step doing a
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +36,33 @@ def _spmm_ell_kernel(idx_ref, val_ref, x_ref, o_ref, *, deg: int):
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _spmm_ell_q_kernel(idx_ref, val_ref, x_ref, sc_ref, o_ref, *, deg: int):
+    """int8 source rows (VMEM-resident in storage dtype): f32 accumulate,
+    then ONE per-channel dequant row multiply -- the scale is row
+    (codeword) independent, so it commutes with the over-neighbors sum."""
+    bb, f = o_ref.shape
+
+    def body(d, acc):
+        ids = idx_ref[:, d]
+        vals = val_ref[:, d].astype(jnp.float32)
+        rows = x_ref[ids, :].astype(jnp.float32)
+        return acc + vals[:, None] * rows
+
+    acc = jax.lax.fori_loop(0, deg, body, jnp.zeros((bb, f), jnp.float32))
+    o_ref[...] = (acc * sc_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("bb", "interpret"))
 def spmm_ell_pallas(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array, *,
+                    x_scale: Optional[jax.Array] = None,
                     bb: int = 128, interpret: bool = True) -> jax.Array:
     """nbr_idx/[b, D] int32, nbr_val/[b, D], x/[n_src, f] -> [b, f] f32.
 
     Padding slots must carry val == 0 (their index may point anywhere valid).
+    ``x_scale`` ([1, f] f32) marks ``x`` as int8 rows with per-channel
+    dequant scales, applied as a single epilogue multiply after the f32
+    accumulate (DESIGN.md section 13) -- the source matrix stays int8 in
+    VMEM, quartering its share of the resident envelope.
     """
     b, deg = nbr_idx.shape
     n_src, f = x.shape
@@ -51,16 +73,25 @@ def spmm_ell_pallas(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array, *,
     val_p = jnp.zeros((bp, deg), jnp.float32).at[:b].set(
         nbr_val.astype(jnp.float32))
 
+    in_specs = [
+        pl.BlockSpec((bb, deg), lambda i: (i, 0)),
+        pl.BlockSpec((bb, deg), lambda i: (i, 0)),
+        pl.BlockSpec((n_src, f), lambda i: (0, 0)),
+    ]
+    operands = [idx_p, val_p, x]
+    if x_scale is None:
+        kern = _spmm_ell_kernel
+    else:
+        kern = _spmm_ell_q_kernel
+        in_specs.append(pl.BlockSpec((1, f), lambda i: (0, 0)))
+        operands.append(x_scale.astype(jnp.float32).reshape(1, f))
+
     out = pl.pallas_call(
-        functools.partial(_spmm_ell_kernel, deg=deg),
+        functools.partial(kern, deg=deg),
         grid=(bp // bb,),
-        in_specs=[
-            pl.BlockSpec((bb, deg), lambda i: (i, 0)),
-            pl.BlockSpec((bb, deg), lambda i: (i, 0)),
-            pl.BlockSpec((n_src, f), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, f), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bp, f), jnp.float32),
         interpret=interpret,
-    )(idx_p, val_p, x)
+    )(*operands)
     return out[:b]

@@ -63,14 +63,16 @@ def _vq_update_kernel(x_ref, c_ref, idx_ref, qerr_ref, cnt_ref, sum_ref, *,
     @pl.when(ki == 0)
     def _init_rows():
         qerr_ref[...] = tile_min
-        idx_ref[...] = tile_arg
+        idx_ref[...] = tile_arg.astype(idx_ref.dtype)
 
     @pl.when(ki > 0)
     def _combine():
         prev = qerr_ref[...]
         take = tile_min < prev
         qerr_ref[...] = jnp.where(take, tile_min, prev)
-        idx_ref[...] = jnp.where(take, tile_arg, idx_ref[...])
+        idx_ref[...] = jnp.where(
+            take, tile_arg,
+            idx_ref[...].astype(jnp.int32)).astype(idx_ref.dtype)
 
     @pl.when(jnp.logical_and(i == 0, ki == 0))
     def _init_stats():
@@ -80,7 +82,7 @@ def _vq_update_kernel(x_ref, c_ref, idx_ref, qerr_ref, cnt_ref, sum_ref, *,
     @pl.when(ki == nk - 1)
     def _accumulate():
         kp = cnt_ref.shape[0]
-        final = idx_ref[...]                              # [bb, 1] post-combine
+        final = idx_ref[...].astype(jnp.int32)            # [bb, 1] post-combine
         rows = i * bb + jax.lax.broadcasted_iota(jnp.int32, (bb, 1), 0)
         valid = rows < b                                  # padded rows: no stats
         cols = jax.lax.broadcasted_iota(jnp.int32, (bb, kp), 1)
@@ -93,18 +95,27 @@ def _vq_update_kernel(x_ref, c_ref, idx_ref, qerr_ref, cnt_ref, sum_ref, *,
         qerr_ref[...] = jnp.maximum(qerr_ref[...] + xn2, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("bb", "kb", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bb", "kb", "interpret", "emit_dtype"))
 def vq_assign_update_pallas(
         x: jax.Array, codewords: jax.Array, *,
         bb: int = 256, kb: int = 512, interpret: bool = False,
+        emit_dtype=jnp.int32,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused assign + stats.  x: [b, f], codewords: [k, f].
 
-    Returns (assignment [b] int32, qerr [b] f32, counts [k] f32,
+    Returns (assignment [b] ``emit_dtype``, qerr [b] f32, counts [k] f32,
     sums [k, f] f32) where qerr[i] = ||x_i - c_{assignment[i]}||^2 and
     counts/sums are the per-codeword member histogram and member sum --
     exactly the statistics Algorithm 2's EMA update consumes, with no
     one-hot intermediate and no second distance pass.
+
+    ``emit_dtype=jnp.uint8`` (valid for k <= 256) EMITS the assignment in
+    the int8 path's storage dtype: with a single k-tile (kp <= 256) the
+    kernel's idx output block is uint8 natively -- padded codeword columns
+    carry 1e15 distance and never win the argmin, so every emitted index
+    is < k.  Multi-k-tile grids carry int32 intermediates in the revisited
+    block (tile offsets exceed the narrow range) and narrow in the wrapper.
 
     Handles all padding internally via the shared
     :func:`~repro.kernels.vq_assign.pad_assign_operands` (padded codewords
@@ -113,7 +124,12 @@ def vq_assign_update_pallas(
     """
     b, f = x.shape
     k = codewords.shape[0]
+    emit = jnp.dtype(emit_dtype)
+    if emit != jnp.int32 and k > 256:
+        raise ValueError(f"emit_dtype={emit} needs k <= 256, got k={k}")
     xp, cp, bb, kb, bp, kp, fp = pad_assign_operands(x, codewords, bb, kb)
+    idx_dtype = emit if (emit == jnp.int32 or
+                         (kp <= kb and kp <= 256)) else jnp.int32
 
     grid = (bp // bb, kp // kb)
     idx, qerr, counts, sums = pl.pallas_call(
@@ -131,11 +147,12 @@ def vq_assign_update_pallas(
             pl.BlockSpec((kp, fp), lambda i, j: (0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), idx_dtype),
             jax.ShapeDtypeStruct((bp, 1), jnp.float32),
             jax.ShapeDtypeStruct((kp, 1), jnp.float32),
             jax.ShapeDtypeStruct((kp, fp), jnp.float32),
         ],
         interpret=interpret,
     )(xp, cp)
-    return idx[:b, 0], qerr[:b, 0], counts[:k, 0], sums[:k, :f]
+    return (idx[:b, 0].astype(emit), qerr[:b, 0],
+            counts[:k, 0], sums[:k, :f])

@@ -37,12 +37,14 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.core.codebook import CodebookConfig
 from repro.distributed import sharding as shd
+from repro.distributed.quantization import tree_bytes
 from repro.graph.batching import (build_epoch_plan, full_operands,
                                   inference_slices)
 from repro.graph.structure import Graph
+from repro.kernels import ops as kops
 from repro.models.gnn import (GNNConfig, _layer_out_dims, init_gnn,
-                              init_vq_states, vq_infer_epoch,
-                              vq_serve_batch)
+                              init_vq_states, quantize_vq_states,
+                              vq_infer_epoch, vq_serve_batch)
 
 
 class GNNServer:
@@ -194,6 +196,11 @@ def main():
                     "(0 = serve from init + assignment refresh)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="shard the micro-batch over an N-device data mesh")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="kernel operand precision: int8 serves uint8 "
+                    "assignment tables + int8 codeword snapshots "
+                    "(DESIGN.md section 13)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -203,6 +210,7 @@ def main():
     cfg = GNNConfig(backbone=args.backbone, f_in=g.f, hidden=args.hidden,
                     n_out=g.num_classes, n_layers=args.layers,
                     codebook=CodebookConfig(k=args.k, f_prod=4))
+    kops.configure_kernel_precision(args.precision)
     if args.train_epochs > 0:
         from repro.train.gnn_trainer import train_vq
         r = train_vq(g, cfg, epochs=args.train_epochs,
@@ -211,6 +219,8 @@ def main():
     else:
         params = init_gnn(jax.random.PRNGKey(args.seed), cfg)
         vq = init_vq_states(jax.random.PRNGKey(args.seed + 1), cfg, g.n)
+    if args.precision == "int8":
+        vq = quantize_vq_states(vq, cfg)
 
     mesh = shd.graph_dp_mesh(args.mesh) if args.mesh else None
     server = GNNServer(g, cfg, params, vq, args.batch, mesh=mesh)
@@ -224,11 +234,17 @@ def main():
     report.update({"graph_n": g.n, "batch": server.batch,
                    "backbone": args.backbone,
                    "mesh": args.mesh or 1,
+                   "precision": args.precision,
+                   "vq_state_bytes": int(sum(
+                       tree_bytes((s.assignment,) if s.qcw is None
+                                  else (s.assignment, s.qcw))
+                       for s in server.vq)),
                    "refresh_s": t_refresh, "warmup_s": t_warm})
 
     print(f"serve_gnn {args.backbone} n={g.n} batch={server.batch} "
-          f"mesh={report['mesh']}: refresh {t_refresh:.2f}s, "
-          f"warm compile {t_warm:.2f}s")
+          f"mesh={report['mesh']} precision={args.precision} "
+          f"(vq operand bytes {report['vq_state_bytes']}): "
+          f"refresh {t_refresh:.2f}s, warm compile {t_warm:.2f}s")
     print(f"  {report['nodes']} nodes / {report['requests']} requests in "
           f"{report['wall_s']:.3f}s -> {report['nodes_per_s']:.0f} nodes/s, "
           f"{report['requests_per_s']:.1f} req/s")

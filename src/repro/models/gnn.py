@@ -19,7 +19,7 @@ import numpy as np
 from repro.core import codebook as cbm
 from repro.core.codebook import CodebookConfig
 from repro.core.conv import LayerVQState, MinibatchPack, init_layer_vq_state, \
-    refresh_assignment
+    quantize_layer_state, refresh_assignment
 from repro.distributed.collectives import psum_tree
 from repro.graph.batching import EpochPlan, FullGraphOperands, plan_batch
 from repro.nn.gnn_layers import BACKBONES
@@ -98,6 +98,27 @@ def init_vq_states(key: jax.Array, cfg: GNNConfig,
         fg = bk.f_grad(fi, fo, heads=cfg.heads)
         states.append(init_layer_vq_state(k, n_nodes, fi, fg, cb_cfg))
     return states
+
+
+def quantize_vq_states(vq_states: list[LayerVQState],
+                       cfg: GNNConfig) -> list[LayerVQState]:
+    """int8 serving conversion of the per-layer VQ states.
+
+    Each layer gets a uint8 assignment table (k <= 256 -- the 4x VMEM win
+    on the fused context kernel's resident table) and an attached QTensor
+    codeword snapshot, so every context dispatch downstream consumes int8
+    operands (DESIGN.md section 13).  Idempotent; the fp32 codebook stays
+    in place for updates and dense (GAT/transformer) reads.
+    """
+    cb_cfg = cfg.layer_codebook_cfg()
+    if cb_cfg.k > 256:
+        raise ValueError(
+            f"int8 assignment tables need k <= 256, got k={cb_cfg.k}")
+    out = []
+    for (fi, _), vq in zip(_layer_out_dims(cfg), vq_states):
+        st = vq._replace(assignment=vq.assignment.astype(jnp.uint8))
+        out.append(quantize_layer_state(st, fi, cb_cfg))
+    return out
 
 
 def probe_shapes(cfg: GNNConfig, b: int) -> list[tuple[int, ...]]:
@@ -300,9 +321,15 @@ def _vq_step_body(params, vq_states, opt_state, pack: MinibatchPack,
             vq_errs.append(jnp.sqrt(
                 jax.lax.psum(jnp.sum(stats.qerr), axis_name) /
                 (jax.lax.psum(jnp.sum(stats.vnorm2), axis_name) + 1e-12)))
-        new_states.append(refresh_assignment(
-            LayerVQState(new_cb, vq.assignment, vq.counts),
-            refresh_ids, assign))
+        st = refresh_assignment(
+            LayerVQState(new_cb, vq.assignment, vq.counts, vq.qcw),
+            refresh_ids, assign)
+        if vq.qcw is not None:
+            # quantize-on-update: rebuild the int8 codeword snapshot from
+            # the post-EMA codebook; scales are reused inside the drift
+            # band so barely-moving tables keep byte-stable int8 state
+            st = quantize_layer_state(st, feats.shape[-1], cb_cfg)
+        new_states.append(st)
 
     return new_params, new_states, new_opt, loss, out, jnp.stack(vq_errs)
 

@@ -23,10 +23,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import codebook as cbm
 from repro.core.codebook import CodebookConfig
 from repro.core.conv import (LayerVQState, MinibatchPack, fixed_conv_operands,
-                             out_of_batch_cluster_mass)
+                             layer_codewords, out_of_batch_cluster_mass)
 from repro.core.message_passing import (approx_message_passing,
                                         inject_context_grad_materialized,
                                         inject_context_grad_table,
@@ -81,8 +80,8 @@ class GCN:
                  vq: LayerVQState, degrees, cfg: CodebookConfig, act,
                  f_in: int, f_out: int, inject: bool = True) -> jax.Array:
         ops_, self_vals = fixed_conv_operands('gcn', pack, degrees)
-        fcw = cbm.feature_codewords(vq.codebook, f_in, cfg)
-        gcw = cbm.gradient_codewords(vq.codebook, f_in, cfg)
+        # int8 QTensor operands when the layer state carries a snapshot
+        fcw, gcw = layer_codewords(vq, f_in, cfg)
         m = approx_message_passing(ops_, x_b, fcw, gcw, vq.assignment,
                                    p["w"], inject)
         m = m + self_vals[:, None] * x_b
@@ -121,8 +120,7 @@ class SAGE:
     def vq_apply(p: Params, x_b, probe, pack, vq, degrees, cfg, act,
                  f_in: int, f_out: int, inject: bool = True) -> jax.Array:
         ops_, _ = fixed_conv_operands('mean', pack, degrees)
-        fcw = cbm.feature_codewords(vq.codebook, f_in, cfg)
-        gcw = cbm.gradient_codewords(vq.codebook, f_in, cfg)
+        fcw, gcw = layer_codewords(vq, f_in, cfg)
         m2 = approx_message_passing(ops_, x_b, fcw, gcw, vq.assignment,
                                     p["w2"], inject)
         # identity convolution is always intra-batch -> exact autodiff
@@ -164,8 +162,7 @@ class GIN:
     def vq_apply(p: Params, x_b, probe, pack, vq, degrees, cfg, act,
                  f_in: int, f_out: int, inject: bool = True) -> jax.Array:
         ops_, _ = fixed_conv_operands('adj', pack, degrees)
-        fcw = cbm.feature_codewords(vq.codebook, f_in, cfg)
-        gcw = cbm.gradient_codewords(vq.codebook, f_in, cfg)
+        fcw, gcw = layer_codewords(vq, f_in, cfg)
         s = approx_message_passing(ops_, x_b, fcw, gcw, vq.assignment,
                                    p["w1"], inject)
         m = (1.0 + p["eps"]) * x_b + s
@@ -235,8 +232,9 @@ class GAT:
                  f_in: int, f_out: int, inject: bool = True) -> jax.Array:
         b = x_b.shape[0]
         heads, fh = p["a_dst"].shape
-        fcw = cbm.feature_codewords(vq.codebook, f_in, cfg)
-        gcw = cbm.gradient_codewords(vq.codebook, f_in, cfg)
+        # dense f32 reads: GAT mixes branches through the per-head value
+        # map, so kernel-side dequant epilogues cannot express its math
+        fcw, gcw = layer_codewords(vq, f_in, cfg, dense=True)
 
         # ---- Eq. 7 backward injection (before anything touches x_b) ----
         # reverse-edge weights  C^h_{j,i} = w(s_dst(j), s_src(i)), with the
@@ -352,8 +350,8 @@ class GraphTransformer:
         heads, dh = p["wq"].shape[1:]
         assert vq.codebook.n_branches == 1, \
             "GraphTransformer needs a full-width codebook (f_prod=f_in)"
-        fcw = cbm.feature_codewords(vq.codebook, f_in, cfg)[0]   # [k, f_in]
-        gcw = cbm.gradient_codewords(vq.codebook, f_in, cfg)[0]  # [k, f_out]
+        dfcw, dgcw = layer_codewords(vq, f_in, cfg, dense=True)
+        fcw, gcw = dfcw[0], dgcw[0]   # [k, f_in], [k, f_out]
         fcw = jax.lax.stop_gradient(fcw)
         mass = out_of_batch_cluster_mass(vq, pack.batch_ids)[0]  # [k]
 

@@ -1,0 +1,164 @@
+"""CI gating of benchmarks/run.py: the --check parity gate must exit
+non-zero on out-of-tolerance rows, and the --baseline bench-trend gate on
+>20% regressions of gated metrics -- both fail-closed (a gate that exits 0
+on a red row is worse than no gate).  Uses synthetic suite stubs injected
+into sys.modules, never the real (slow) benches.
+"""
+import json
+import os
+import sys
+import types
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import run as bench_run  # noqa: E402
+
+
+def _row(name, metrics, tolerance=None):
+    ok = tolerance is None or all(
+        metrics.get(m, 0.0) <= t for m, t in tolerance.items())
+    return {"name": name, "us_per_call": 1.0, "metrics": metrics,
+            "tolerance": tolerance, "pass": ok}
+
+
+@pytest.fixture
+def stub_suite(monkeypatch):
+    """Install benchmarks.bench_stub with caller-provided rows."""
+    def install(rows):
+        mod = types.ModuleType("benchmarks.bench_stub")
+        mod.run_structured = lambda: rows
+        monkeypatch.setitem(sys.modules, "benchmarks.bench_stub", mod)
+        return mod
+    return install
+
+
+# ---------------------------------------------------------------------------
+# --check parity gate
+# ---------------------------------------------------------------------------
+
+def test_check_fails_on_out_of_tolerance_parity(stub_suite, tmp_path):
+    # synthetic parity delta above tolerance: maxerr 0.5 vs gate 1e-3
+    stub_suite([_row("stub/parity", {"maxerr": 0.5},
+                     tolerance={"maxerr": 1e-3})])
+    out = tmp_path / "out.json"
+    with pytest.raises(SystemExit) as e:
+        bench_run.run_suite_structured("stub", str(out), check=True)
+    assert e.value.code == 1
+    data = json.loads(out.read_text())
+    assert data["failures"] == ["stub/parity"]
+
+
+def test_check_fails_on_sub_gate_speedup_ratio(stub_suite, tmp_path):
+    # a gated speedup ratio that misses the bar (int8_over_fp32 must be
+    # <= 1/1.3; 0.9 means the int8 path is barely faster than fp32)
+    stub_suite([_row("stub/int8_vs_fp32", {"int8_over_fp32": 0.9},
+                     tolerance={"int8_over_fp32": 1.0 / 1.3})])
+    with pytest.raises(SystemExit) as e:
+        bench_run.run_suite_structured("stub", None, check=True)
+    assert e.value.code == 1
+
+
+def test_check_passes_within_tolerance(stub_suite, tmp_path, capsys):
+    stub_suite([_row("stub/ok", {"maxerr": 1e-6},
+                     tolerance={"maxerr": 1e-3}),
+                _row("stub/ungated", {"speedup": 3.0})])
+    out = tmp_path / "out.json"
+    bench_run.run_suite_structured("stub", str(out), check=True)  # no raise
+    assert json.loads(out.read_text())["failures"] == []
+    assert "ok" in capsys.readouterr().out
+
+
+def test_without_check_failures_report_but_exit_zero(stub_suite):
+    stub_suite([_row("stub/parity", {"maxerr": 0.5},
+                     tolerance={"maxerr": 1e-3})])
+    bench_run.run_suite_structured("stub", None, check=False)  # no raise
+
+
+# ---------------------------------------------------------------------------
+# baseline_failures comparator
+# ---------------------------------------------------------------------------
+
+def _baseline(rows):
+    return {"suite": "stub", "rows": rows}
+
+
+def test_baseline_flags_large_regression():
+    base = _baseline([_row("a", {"ratio": 0.4}, {"ratio": 1.0})])
+    cur = [_row("a", {"ratio": 0.6}, {"ratio": 1.0})]   # +50% and +0.2
+    fails = bench_run.baseline_failures(cur, base)
+    assert len(fails) == 1 and fails[0].startswith("a:ratio")
+
+
+def test_baseline_tolerates_small_and_relative_noise():
+    base = _baseline([
+        _row("rel", {"ratio": 0.4}, {"ratio": 1.0}),
+        _row("abs", {"ratio": 0.5}, {"ratio": 1.0}),
+        _row("tiny", {"maxerr": 1e-6}, {"maxerr": 1e-3}),
+    ])
+    cur = [
+        # +15% relative: inside rel=1.2
+        _row("rel", {"ratio": 0.46}, {"ratio": 1.0}),
+        # above rel but only +0.015 absolute: inside slack=0.02
+        _row("abs", {"ratio": 0.515}, {"ratio": 1.0}),
+        # near-zero baseline (< floor): any multiple is still noise
+        _row("tiny", {"maxerr": 1e-4}, {"maxerr": 1e-3}),
+    ]
+    assert bench_run.baseline_failures(cur, _baseline([])) == []
+    assert bench_run.baseline_failures(cur, base) == []
+
+
+def test_baseline_headroom_guard():
+    # a 2.4x jump that still sits below half the hard gate is scheduler
+    # noise, not a trend: the absolute tolerance has ample margin left
+    base = _baseline([_row("a", {"ratio": 0.05}, {"ratio": 0.77})])
+    cur = [_row("a", {"ratio": 0.12}, {"ratio": 0.77})]
+    assert bench_run.baseline_failures(cur, base) == []
+    # past half the gate, the same relative jump does fail
+    base = _baseline([_row("a", {"ratio": 0.2}, {"ratio": 0.77})])
+    cur = [_row("a", {"ratio": 0.48}, {"ratio": 0.77})]
+    assert len(bench_run.baseline_failures(cur, base)) == 1
+
+
+def test_baseline_new_rows_and_ungated_metrics_never_fail():
+    base = _baseline([_row("old", {"ratio": 0.1}, {"ratio": 1.0})])
+    cur = [
+        _row("new", {"ratio": 9.9}, {"ratio": 10.0}),    # not in baseline
+        _row("old", {"wall_us": 99.0, "ratio": 0.1},     # wall ungated
+             {"ratio": 1.0}),
+    ]
+    assert bench_run.baseline_failures(cur, base) == []
+
+
+def test_baseline_gate_fails_even_without_check(stub_suite, tmp_path):
+    stub_suite([_row("a", {"ratio": 0.9}, {"ratio": 1.0})])
+    bp = tmp_path / "base.json"
+    bp.write_text(json.dumps(_baseline(
+        [_row("a", {"ratio": 0.3}, {"ratio": 1.0})])))
+    out = tmp_path / "out.json"
+    with pytest.raises(SystemExit) as e:
+        bench_run.run_suite_structured("stub", str(out), check=False,
+                                       baseline_path=str(bp))
+    assert e.value.code == 1
+    assert json.loads(out.read_text())["trend_failures"]
+
+
+# ---------------------------------------------------------------------------
+# CLI argument handling (fail-closed paths)
+# ---------------------------------------------------------------------------
+
+def test_main_missing_baseline_is_hard_error(monkeypatch, tmp_path):
+    monkeypatch.setattr(sys, "argv", [
+        "run", "kernels", "--baseline", str(tmp_path / "gone.json")])
+    with pytest.raises(SystemExit, match="no such file"):
+        bench_run.main()
+
+
+def test_main_rejects_gate_flags_without_valid_suite(monkeypatch):
+    monkeypatch.setattr(sys, "argv", ["run", "nosuch", "--check"])
+    with pytest.raises(SystemExit, match="require exactly one suite"):
+        bench_run.main()
+    monkeypatch.setattr(sys, "argv", ["run", "--json"])
+    with pytest.raises(SystemExit, match="path operand"):
+        bench_run.main()
