@@ -38,6 +38,10 @@ from repro.models.gnn import (GNNConfig, init_gnn, init_vq_states,
 from repro.train.optimizer import rmsprop
 
 _GATE = {"scan_over_loop": 0.5}   # scan must be >= 2x the host loop
+# row-sharded graph state (DESIGN.md section 14): per-device graph-state
+# bytes must drop to <= 0.6x the replicated footprint on 2 devices, and
+# the cross-shard gathers may cost at most 1/0.8 of replicated DP's time
+_SHARD_GATE = {"graph_state_ratio": 0.6, "sharded_over_dp": 1.25}
 
 
 class _Env:
@@ -123,6 +127,38 @@ def _scan_dp_epoch_s(env: _Env, n_devices: int) -> float:
     return _time_epochs(epoch)
 
 
+def _replicated_state_bytes(env: _Env) -> int:
+    """Per-device graph-state bytes of the replicated DP path (every
+    device holds the full node tables)."""
+    return int(sum(int(t.nbytes) for t in (
+        env.plan.nbr_ids, env.plan.nbr_mask, env.plan.rev_ids,
+        env.plan.rev_mask, env.x, env.labels, env.train_mask,
+        env.ops.degrees)))
+
+
+def _scan_sharded_epoch_s(env: _Env, n_devices: int) -> tuple[float, int]:
+    """(epoch seconds, per-device graph-state bytes) of the row-sharded
+    executor."""
+    from repro.distributed.data_parallel import (ShardedGraphState,
+                                                 graph_dp_mesh,
+                                                 vq_train_epoch_sharded)
+    mesh = graph_dp_mesh(n_devices)
+    state = ShardedGraphState(mesh, env.plan, env.x, env.ops.degrees,
+                              labels=env.labels,
+                              train_mask=env.train_mask)
+    rng = np.random.default_rng(0)
+    st = env.fresh()
+
+    def epoch():
+        ids, sm = epoch_slices(rng.permutation(np.arange(env.g.n)),
+                               env.batch)
+        st[0], st[1], st[2], losses, _ = vq_train_epoch_sharded(
+            state, st[0], st[1], st[2], jnp.asarray(ids.astype(np.int32)),
+            jnp.asarray(sm), env.cfg, env.opt)
+        jax.block_until_ready(losses)
+    return _time_epochs(epoch), state.per_device_bytes()
+
+
 def run_structured() -> list[dict]:
     fast = os.environ.get("REPRO_BENCH_FAST", "1") != "0"
     # (n, batch, hidden, k, gated): gate only the dispatch-bound shape
@@ -151,6 +187,14 @@ def run_structured() -> list[dict]:
         t_dp = _scan_dp_epoch_s(gated_env, 2)
         _entry(rows, "epoch/scan_dp2_n2048_b32", t_dp * 1e6,
                {"steps_per_s": gated_env.steps / t_dp})
+        t_sh, dev_bytes = _scan_sharded_epoch_s(gated_env, 2)
+        _entry(rows, "epoch/scan_sharded2_n2048_b32", t_sh * 1e6,
+               {"steps_per_s": gated_env.steps / t_sh,
+                "sharded_over_dp": t_sh / t_dp,
+                "per_device_bytes": dev_bytes,
+                "graph_state_ratio":
+                    dev_bytes / _replicated_state_bytes(gated_env)},
+               tolerance=_SHARD_GATE)
     return rows
 
 

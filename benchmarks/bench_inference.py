@@ -16,6 +16,8 @@ Two entry points (the ``benchmarks/run.py`` convention):
 """
 from __future__ import annotations
 
+import benchmarks._device_env  # noqa: F401  (sets XLA_FLAGS; precedes jax)
+
 import os
 import time
 
@@ -36,6 +38,9 @@ from repro.train.gnn_trainer import (eager_inference_loop, train_vq,
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "1") == "1"
 _GATE = {"executor_over_eager": 0.5}   # executor >= 2x the eager loop
+# row-sharded inference state (DESIGN.md section 14): per-device bytes of
+# the plan + activation tables must drop to <= 0.6x replicated on 2 devices
+_SHARD_GATE = {"graph_state_ratio": 0.6}
 _INT8_GATE = {"int8_acc_drop": 0.02}   # int8 serving parity (ISSUE 7)
 _MEM_GATE = {"int8_state_ratio": 0.5}  # quantized operands <= half fp32
 
@@ -74,6 +79,30 @@ def _executor_vs_eager_rows(rows: list, n: int, batch: int, hidden: int,
             "speedup": t_eager / t_exec,
             "executor_over_eager": t_exec / t_eager},
            tolerance=_GATE if gated else None)
+
+    # --- row-sharded inference state (the --mesh capacity mode) ---
+    if gated and len(jax.devices()) >= 2:
+        from repro.distributed.data_parallel import (ShardedGraphState,
+                                                     graph_dp_mesh,
+                                                     vq_infer_epoch_sharded)
+        state = ShardedGraphState(graph_dp_mesh(2), plan, x, ops.degrees)
+
+        def run_sharded():
+            acts, _ = vq_infer_epoch_sharded(state, params, vq, perm, sm,
+                                             cfg)
+            jax.block_until_ready(acts)
+
+        t_sh = time_best_s(run_sharded)
+        repl = int(sum(int(t.nbytes) for t in (
+            plan.nbr_ids, plan.nbr_mask, plan.rev_ids, plan.rev_mask, x,
+            ops.degrees)))
+        dev_bytes = state.per_device_bytes()
+        _entry(rows, f"inference/executor_sharded2_{tag}", t_sh * 1e6,
+               {"batches": ids.shape[0],
+                "sharded_over_executor": t_sh / t_exec,
+                "per_device_bytes": dev_bytes,
+                "graph_state_ratio": dev_bytes / repl},
+               tolerance=_SHARD_GATE)
 
 
 def run_structured() -> list[dict]:

@@ -73,3 +73,91 @@ def compressed_grad_allreduce(grads: PyTree, axis_name: str,
         news.append(nr)
     return (jax.tree_util.tree_unflatten(treedef, outs),
             jax.tree_util.tree_unflatten(treedef, news))
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard row gather / scatter for the row-sharded graph state
+# (DESIGN.md section 14).  Ownership is contiguous-block: shard s of the
+# "data" axis owns global rows [s*n_local, (s+1)*n_local) of a table
+# whose sharded operand inside shard_map is the [n_local, ...] block.
+# ---------------------------------------------------------------------------
+
+def all_gather_rows(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather along `axis_name`, flattening the shard axis into the
+    leading row axis (shard-major order -- matches contiguous-block row
+    ownership, so gathering each shard's [n_local, ...] block yields the
+    padded global table)."""
+    g = jax.lax.all_gather(x, axis_name)
+    return g.reshape((-1,) + x.shape[1:])
+
+
+def gather_from_shards(table: jax.Array, ids: jax.Array, axis_name: str,
+                       *, compress: bool = False) -> jax.Array:
+    """Cross-shard `table[ids]` for a row-sharded table.
+
+    Every shard contributes its [n_local, ...] block of the padded global
+    table and a local request vector `ids` of *global* row indices; each
+    shard answers the all-gathered requests for the rows it owns
+    (masked-zero elsewhere), a psum superposes the answers (each row has
+    exactly one owner, so the sum is exact), and each shard slices its
+    own request window back out.  Integer payloads are summed in int32
+    and cast back -- bit-exact.  ``compress=True`` moves float payloads
+    as int8 -- the bandwidth knob for large feature gathers over slow
+    links.  Unlike :func:`compressed_psum` (per-shard scales + error
+    feedback, right for gradients averaged over many steps), the gather
+    quantizes every shard against ONE pmax-shared scale: each row has
+    exactly one owner, so the dequantized sum is then exact up to a
+    single quantization half-step (max|table| / 254).
+
+    Inside shard_map only.  `ids` must index the padded global table
+    (0 <= id < n_local * ndev).
+    """
+    n_local = table.shape[0]
+    b = ids.shape[0]
+    me = jax.lax.axis_index(axis_name)
+    all_ids = all_gather_rows(ids.astype(jnp.int32), axis_name)
+    loc = all_ids - me * n_local
+    own = (loc >= 0) & (loc < n_local)
+    rows = table[jnp.clip(loc, 0, n_local - 1)]
+    mask = own.reshape((-1,) + (1,) * (rows.ndim - 1))
+    if jnp.issubdtype(table.dtype, jnp.integer) or table.dtype == jnp.bool_:
+        contrib = jnp.where(mask, rows.astype(jnp.int32), 0)
+        full = jax.lax.psum(contrib, axis_name).astype(table.dtype)
+    elif compress:
+        contrib = jnp.where(mask, rows.astype(jnp.float32), 0.0)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(contrib)), axis_name) \
+            / 127.0 + 1e-12
+        q = jnp.round(contrib / scale).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        full = (qsum.astype(jnp.float32) * scale).astype(table.dtype)
+    else:
+        contrib = jnp.where(mask, rows, jnp.zeros_like(rows))
+        full = jax.lax.psum(contrib, axis_name)
+    return jax.lax.dynamic_slice_in_dim(full, me * b, b, axis=0)
+
+
+def shard_scatter_rows(table: jax.Array, ids: jax.Array, rows: jax.Array,
+                       axis_name: str) -> jax.Array:
+    """Cross-shard `table.at[ids].set(rows)` for a row-sharded table.
+
+    All shards' (global id, row) pairs are all-gathered; each shard
+    rewrites the rows it owns and parks foreign/duplicate-pad writes on a
+    transient extra local row that is sliced off afterward.  `ids` must
+    be distinct across the whole gather wherever they target real rows
+    (the inference executor guarantees this: each batch writes distinct
+    node ids, wrap-pad slots are diverted to the sacrificial global row,
+    which is itself row-sharded state and may be clobbered freely).
+
+    Inside shard_map only.  Returns the updated [n_local, ...] block.
+    """
+    n_local = table.shape[0]
+    me = jax.lax.axis_index(axis_name)
+    all_ids = all_gather_rows(ids.astype(jnp.int32), axis_name)
+    all_rows = all_gather_rows(rows, axis_name)
+    loc = all_ids - me * n_local
+    own = (loc >= 0) & (loc < n_local)
+    dst = jnp.where(own, jnp.clip(loc, 0, n_local - 1), n_local)
+    park = jnp.zeros((1,) + tuple(table.shape[1:]), table.dtype)
+    out = jnp.concatenate([table, park], axis=0)
+    out = out.at[dst].set(all_rows.astype(table.dtype))
+    return out[:n_local]

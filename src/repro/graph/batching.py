@@ -342,6 +342,56 @@ def plan_batch(plan: EpochPlan, batch_ids: jnp.ndarray,
         stripe_index=None, slot_mask=slot_mask)
 
 
+def _inbatch_positions(batch_ids: jnp.ndarray, ids: jnp.ndarray,
+                       mask: jnp.ndarray) -> jnp.ndarray:
+    """node id -> in-batch position (-1 when absent/masked) via
+    argsort+searchsorted over the b batch ids instead of ``plan_batch``'s
+    O(n) node->slot scatter.  The sharded executor uses this because a
+    transient [n] slot array would reintroduce the per-device O(n) memory
+    the row sharding just removed.  For distinct batch ids the result is
+    identical to the scatter; for duplicate ids (serve path) it picks one
+    authoritative slot, which references the same feature row -- the
+    downstream gathers are value-identical either way."""
+    b = batch_ids.shape[0]
+    order = jnp.argsort(batch_ids)
+    sb = batch_ids[order]
+    j = jnp.clip(jnp.searchsorted(sb, ids), 0, b - 1)
+    hit = (sb[j] == ids) & (mask != 0)
+    return jnp.where(hit, order[j], -1).astype(jnp.int32)
+
+
+def plan_batch_sharded(plan: EpochPlan, batch_ids: jnp.ndarray,
+                       axis_name: str,
+                       slot_mask: Optional[jnp.ndarray] = None
+                       ) -> MinibatchPack:
+    """:func:`plan_batch` against a ROW-SHARDED EpochPlan, inside
+    shard_map: ``plan``'s tables are each shard's contiguous
+    [n_local, D] row block of the padded global tables, and the row
+    gathers go cross-shard through
+    :func:`repro.distributed.collectives.gather_from_shards`.  The id
+    and mask tables are concatenated to [n_local, D+Dr] before the
+    gather so one batch costs two cross-shard gathers (one int, one
+    float) instead of four.  Positions come from
+    :func:`_inbatch_positions` (no O(n) transient).  Value-identical to
+    ``plan_batch`` on the unsharded plan for the same batch."""
+    from repro.distributed.collectives import gather_from_shards
+
+    d = plan.nbr_ids.shape[1]
+    batch_ids = batch_ids.astype(jnp.int32)
+    ids_tab = jnp.concatenate([plan.nbr_ids, plan.rev_ids], axis=1)
+    mask_tab = jnp.concatenate([plan.nbr_mask, plan.rev_mask], axis=1)
+    ids_rows = gather_from_shards(ids_tab, batch_ids, axis_name)
+    mask_rows = gather_from_shards(mask_tab, batch_ids, axis_name)
+    nbr, rev = ids_rows[:, :d], ids_rows[:, d:]
+    nmask, rmask = mask_rows[:, :d], mask_rows[:, d:]
+    npos = _inbatch_positions(batch_ids, nbr, nmask)
+    rpos = _inbatch_positions(batch_ids, rev, rmask)
+    return MinibatchPack(
+        batch_ids=batch_ids, nbr_ids=nbr, nbr_mask=nmask, nbr_pos=npos,
+        rev_ids=rev, rev_mask=rmask, rev_pos=rpos,
+        stripe_index=None, slot_mask=slot_mask)
+
+
 # ---------------------------------------------------------------------------
 # sampler epoch plans (DESIGN.md section 12)
 # ---------------------------------------------------------------------------

@@ -126,8 +126,12 @@ def _interpret() -> bool:
 
 def tuned_spmm(n_src: int, f: int, itemsize: int = 4
                ) -> Optional[dict[str, Any]]:
-    """{'variant': 'resident'|'hbm', 'bb': int} for a [n_src, f] source
-    matrix of ``itemsize``-byte elements, or None when autotuning is off."""
+    """{'variant': 'resident'|'hbm', 'bb': int, 'stripe': int} for a
+    [n_src, f] source matrix of ``itemsize``-byte elements, or None when
+    autotuning is off.  ``stripe`` (the HBM variant's DMA granule) is
+    measured alongside bb under the same cache entry; the resident
+    variant ignores it, and a caller's precomputed ``StripeIndex`` still
+    pins both (tuner config never overrides an explicit tiling)."""
     if not enabled():
         return None
     key = cache_key("spmm", (n_src, f, itemsize),
@@ -148,16 +152,17 @@ def tuned_spmm(n_src: int, f: int, itemsize: int = 4
     x = jax.random.normal(kx, (ns, fm), jnp.float32)
     interp = _interpret()
 
-    timings: dict[tuple[str, int], float] = {}
+    timings: dict[tuple[str, int, int], float] = {}
     for bb in (64, 128, 256):
-        timings[("resident", bb)] = _time(
+        timings[("resident", bb, 512)] = _time(
             lambda i, v, s, _bb=bb: spmm_ell_pallas(
                 i, v, s, bb=_bb, interpret=interp), idx, val, x)
-    timings[("hbm", 128)] = _time(
-        lambda i, v, s: spmm_ell_hbm_pallas(
-            i, v, s, None, interpret=interp), idx, val, x)
-    (variant, bb), _ = min(timings.items(), key=lambda kv_: kv_[1])
-    cfg = {"variant": variant, "bb": int(bb)}
+    for stripe in (256, 512, 1024):
+        timings[("hbm", 128, stripe)] = _time(
+            lambda i, v, s, _st=stripe: spmm_ell_hbm_pallas(
+                i, v, s, None, stripe=_st, interpret=interp), idx, val, x)
+    (variant, bb, stripe), _ = min(timings.items(), key=lambda kv_: kv_[1])
+    cfg = {"variant": variant, "bb": int(bb), "stripe": int(stripe)}
     record(key, cfg)
     return cfg
 

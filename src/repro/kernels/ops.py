@@ -211,26 +211,29 @@ def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
     variant; the resident kernel and the CPU oracle ignore it.
 
     ``x`` may be a ``QTensor`` of int8 rows (or pass ``x_scale`` [1, f]
-    explicitly with an int8 ``x``): the resident kernel and the CPU oracle
-    consume the storage dtype natively with one dequant epilogue; the HBM
-    variant dequantizes up front (its VMEM pressure is already bounded by
-    the stripe, so the int8 win there is only DMA bytes -- TODO).
+    explicitly with an int8 ``x``): both kernel variants and the CPU
+    oracle consume the storage dtype natively -- f32 accumulate and one
+    dequant epilogue inside the kernel, so the HBM variant's stripes DMA
+    as int8 bytes too (DESIGN.md section 13).
+
+    A precomputed ``stripe_index`` pins the HBM tiling (its static
+    bb/stripe override the tuner's); otherwise the autotuner's measured
+    ``bb``/``stripe`` flow into whichever variant dispatch picks.
     """
     if isinstance(x, QTensor):
         x, x_scale = x.q, x.scale
     if _use_pallas():
         interpret = jax.default_backend() != "tpu"
         n_src, f = x.shape
-        bb = 128
+        bb, stripe = 128, 512
         tuned = autotune.tuned_spmm(n_src, f, x.dtype.itemsize)
         if tuned is not None:
             bb = int(tuned.get("bb", bb))
+            stripe = int(tuned.get("stripe", stripe))
         if spmm_ell_variant(n_src, f, x.dtype.itemsize) == "hbm":
-            if x_scale is not None:
-                x = x.astype(jnp.float32) * \
-                    x_scale.astype(jnp.float32).reshape(1, -1)
             return spmm_ell_hbm_pallas(
-                nbr_idx, nbr_val, x, stripe_index, interpret=interpret)
+                nbr_idx, nbr_val, x, stripe_index, x_scale=x_scale,
+                bb=bb, stripe=stripe, interpret=interpret)
         return spmm_ell_pallas(nbr_idx, nbr_val, x, x_scale=x_scale,
                                bb=bb, interpret=interpret)
     return ref.spmm_ell(nbr_idx, nbr_val, x, x_scale)

@@ -21,6 +21,14 @@ gives nodes/s throughput plus p50/p99 step and request latency.
 (``sharding.graph_dp_mesh`` + ``sharding.serve_batch_spec``): ids placed
 with the serve spec let jit's SPMD partitioner split the per-request
 gathers and forward across devices while plan/codebooks stay replicated.
+
+``--mesh N --shard-graph`` flips the mesh from a throughput knob to a
+CAPACITY knob (DESIGN.md section 14): the EpochPlan, feature table, and
+per-layer activation tables are row-sharded over the mesh
+(``ShardedGraphState``), per-batch rows are cross-shard-gathered, and
+peak per-device graph-state bytes drop ~1/N -- the served graph can
+outgrow a single device's HBM.  The report's
+``graph_state_bytes_per_device`` records exactly that.
 """
 from __future__ import annotations
 
@@ -51,22 +59,51 @@ class GNNServer:
     """Device-resident serving state + the precompiled O(b) serve step."""
 
     def __init__(self, g: Graph, cfg: GNNConfig, params, vq_states,
-                 batch: int, mesh: Optional[Mesh] = None):
+                 batch: int, mesh: Optional[Mesh] = None,
+                 shard_graph: bool = False):
         if batch > g.n:
             batch = g.n            # the id pool bounds a useful micro-batch
-        if mesh is not None and batch % mesh.shape["data"] != 0:
+        if mesh is not None and not shard_graph \
+                and batch % mesh.shape["data"] != 0:
+            # SPMD throughput mode splits the batch axis; the sharded-
+            # state mode replicates the request ids (rows go cross-shard
+            # instead) so any batch size serves
             raise ValueError(
                 f"serve micro-batch {batch} is not divisible by the "
                 f"{mesh.shape['data']}-device data mesh")
+        if shard_graph and mesh is None:
+            raise ValueError(
+                "shard_graph=True row-shards the graph state over a "
+                "mesh -- pass mesh= (graph_dp_mesh) as well")
         self.g, self.cfg, self.batch = g, cfg, batch
+        self.mesh = mesh
         self.ops = full_operands(g)
         self.plan = build_epoch_plan(g, full_ops=self.ops)
         self.x = jnp.asarray(g.features)
         self.params = params
         self.vq = list(vq_states)
         self.f_out = _layer_out_dims(cfg)[-1][1]
-        self.ids_sharding = None if mesh is None else \
+        self.sstate = None
+        if shard_graph:
+            from repro.distributed.data_parallel import ShardedGraphState
+            self.sstate = ShardedGraphState(mesh, self.plan, self.x,
+                                            self.ops.degrees)
+            # the replicated copies exist only transiently at build time
+            # on a real multi-host deployment; here they back _evaluate-
+            # style offline use and the bench's replicated-vs-sharded
+            # byte comparison
+        self.ids_sharding = None if mesh is None or shard_graph else \
             NamedSharding(mesh, shd.serve_batch_spec())
+
+    def graph_state_bytes_per_device(self) -> int:
+        """Peak per-device bytes of the serving graph state (plan +
+        features + degrees): the --mesh capacity metric."""
+        if self.sstate is not None:
+            return self.sstate.per_device_bytes()
+        return int(sum(
+            v.nbytes for v in (self.plan.nbr_ids, self.plan.nbr_mask,
+                               self.plan.rev_ids, self.plan.rev_mask,
+                               self.x, self.ops.degrees)))
 
     def refresh(self) -> float:
         """Refresh every layer's codeword assignment from the current
@@ -76,10 +113,18 @@ class GNNServer:
         seconds (includes the executor's O(n_layers) compiles)."""
         t0 = time.time()
         ids, sm = inference_slices(self.g.n, self.batch)
-        _, self.vq = vq_infer_epoch(
-            self.params, self.vq, self.plan,
-            jnp.asarray(ids.astype(np.int32)), jnp.asarray(sm), self.x,
-            self.ops.degrees, self.cfg, inductive=True)
+        if self.sstate is not None:
+            from repro.distributed.data_parallel import \
+                vq_infer_epoch_sharded
+            _, self.vq = vq_infer_epoch_sharded(
+                self.sstate, self.params, self.vq,
+                jnp.asarray(ids.astype(np.int32)), jnp.asarray(sm),
+                self.cfg, inductive=True)
+        else:
+            _, self.vq = vq_infer_epoch(
+                self.params, self.vq, self.plan,
+                jnp.asarray(ids.astype(np.int32)), jnp.asarray(sm),
+                self.x, self.ops.degrees, self.cfg, inductive=True)
         jax.block_until_ready(self.vq)
         return time.time() - t0
 
@@ -100,6 +145,12 @@ class GNNServer:
                 f"serve step needs exactly {self.batch} id slots, got "
                 f"{len(bids)} (use serve() for arbitrary request sizes)")
         ids_d = jnp.asarray(bids.astype(np.int32))
+        if self.sstate is not None:
+            from repro.distributed.data_parallel import \
+                vq_serve_batch_sharded
+            y = vq_serve_batch_sharded(self.sstate, self.params, self.vq,
+                                       ids_d, self.cfg)
+            return np.asarray(y)
         if self.ids_sharding is not None:
             ids_d = jax.device_put(ids_d, self.ids_sharding)
         y = vq_serve_batch(self.params, self.vq, self.plan, ids_d, self.x,
@@ -196,6 +247,10 @@ def main():
                     "(0 = serve from init + assignment refresh)")
     ap.add_argument("--mesh", type=int, default=0,
                     help="shard the micro-batch over an N-device data mesh")
+    ap.add_argument("--shard-graph", action="store_true",
+                    help="with --mesh N: row-shard the graph state over "
+                    "the mesh (capacity mode -- per-device graph bytes "
+                    "drop ~1/N, DESIGN.md section 14)")
     ap.add_argument("--precision", default="fp32",
                     choices=["fp32", "int8"],
                     help="kernel operand precision: int8 serves uint8 "
@@ -223,7 +278,8 @@ def main():
         vq = quantize_vq_states(vq, cfg)
 
     mesh = shd.graph_dp_mesh(args.mesh) if args.mesh else None
-    server = GNNServer(g, cfg, params, vq, args.batch, mesh=mesh)
+    server = GNNServer(g, cfg, params, vq, args.batch, mesh=mesh,
+                       shard_graph=args.shard_graph)
     t_refresh = server.refresh()
     t_warm = server.warmup()
 
@@ -234,6 +290,9 @@ def main():
     report.update({"graph_n": g.n, "batch": server.batch,
                    "backbone": args.backbone,
                    "mesh": args.mesh or 1,
+                   "shard_graph": bool(args.shard_graph),
+                   "graph_state_bytes_per_device":
+                       server.graph_state_bytes_per_device(),
                    "precision": args.precision,
                    "vq_state_bytes": int(sum(
                        tree_bytes((s.assignment,) if s.qcw is None
@@ -242,8 +301,11 @@ def main():
                    "refresh_s": t_refresh, "warmup_s": t_warm})
 
     print(f"serve_gnn {args.backbone} n={g.n} batch={server.batch} "
-          f"mesh={report['mesh']} precision={args.precision} "
-          f"(vq operand bytes {report['vq_state_bytes']}): "
+          f"mesh={report['mesh']}"
+          f"{' (row-sharded graph state)' if args.shard_graph else ''} "
+          f"precision={args.precision} "
+          f"(vq operand bytes {report['vq_state_bytes']}, graph state "
+          f"{report['graph_state_bytes_per_device']} B/device): "
           f"refresh {t_refresh:.2f}s, warm compile {t_warm:.2f}s")
     print(f"  {report['nodes']} nodes / {report['requests']} requests in "
           f"{report['wall_s']:.3f}s -> {report['nodes_per_s']:.0f} nodes/s, "

@@ -20,8 +20,10 @@ from repro.core import codebook as cbm
 from repro.core.codebook import CodebookConfig
 from repro.core.conv import LayerVQState, MinibatchPack, init_layer_vq_state, \
     quantize_layer_state, refresh_assignment
-from repro.distributed.collectives import psum_tree
-from repro.graph.batching import EpochPlan, FullGraphOperands, plan_batch
+from repro.distributed.collectives import gather_from_shards, psum_tree, \
+    shard_scatter_rows
+from repro.graph.batching import EpochPlan, FullGraphOperands, plan_batch, \
+    plan_batch_sharded
 from repro.nn.gnn_layers import BACKBONES
 from repro.train.optimizer import Optimizer
 
@@ -345,21 +347,39 @@ def vq_train_step(params, vq_states, opt_state, pack: MinibatchPack,
 
 def _vq_epoch_body(params, vq_states, opt_state, plan: EpochPlan,
                    perm, slot_mask, x, labels, train_mask, degrees, *,
-                   cfg: GNNConfig, opt: Optimizer, axis_name=None):
+                   cfg: GNNConfig, opt: Optimizer, axis_name=None,
+                   sharded_state=False, compress=False):
     """``lax.scan`` of ``_vq_step_body`` over the S stacked batches of a
     node permutation (trace-level; node task).  Each step slices its batch
     out of the pack-once :class:`~repro.graph.batching.EpochPlan`
     (``plan_batch``: row gather + node->slot scatter, no host round-trip).
     With ``axis_name`` this is the per-replica body of the shard_map
     data-parallel executor (``distributed/data_parallel.py``) and
-    ``perm``/``slot_mask`` are the replica's [S, b/ndev] shard."""
+    ``perm``/``slot_mask`` are the replica's [S, b/ndev] shard.
+
+    With ``sharded_state`` additionally set (DESIGN.md section 14),
+    ``plan``/``x``/``labels``/``train_mask`` are this shard's contiguous
+    row BLOCK of the padded global node tables rather than full replicas:
+    every per-batch row access goes cross-shard
+    (``plan_batch_sharded`` + ``gather_from_shards``), while the step
+    math -- psum'd grads/loss, codebook counts/sums/revival, assignment
+    all-gather -- is byte-identical to the replicated DP path.
+    ``compress`` routes the feature-row gather through the int8
+    ``compressed_psum`` payload (lossy, opt-in)."""
     def body(carry, xs):
         params, vq, ost = carry
         bids, smask = xs
-        pack = plan_batch(plan, bids, smask)
-        lmask = train_mask[bids] * smask
+        if sharded_state:
+            pack = plan_batch_sharded(plan, bids, axis_name, smask)
+            x_b = gather_from_shards(x, bids, axis_name, compress=compress)
+            labels_b = gather_from_shards(labels, bids, axis_name)
+            lmask = gather_from_shards(train_mask, bids, axis_name) * smask
+        else:
+            pack = plan_batch(plan, bids, smask)
+            x_b, labels_b = x[bids], labels[bids]
+            lmask = train_mask[bids] * smask
         params, vq, ost, loss, _, errs = _vq_step_body(
-            params, vq, ost, pack, x[bids], labels[bids], degrees, cfg,
+            params, vq, ost, pack, x_b, labels_b, degrees, cfg,
             opt, loss_mask=lmask, axis_name=axis_name)
         return (params, vq, ost), (loss, errs)
 
@@ -507,6 +527,99 @@ def vq_serve_batch(params, vq_states, plan: EpochPlan, bids: jax.Array,
     INFER_TRACE_COUNT["serve"] += 1
     pack = plan_batch(plan, bids.astype(jnp.int32))
     out, _ = vq_forward(params, x[bids], None, pack, vq_states, degrees,
+                        cfg, inject=False)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# row-sharded inference / serving bodies (DESIGN.md section 14)
+# ---------------------------------------------------------------------------
+
+def _vq_infer_layer_body_sharded(params_l, vq_state: LayerVQState,
+                                 plan: EpochPlan, perm, slot_mask, acts,
+                                 degrees, *, cfg: GNNConfig, layer: int,
+                                 axis_name: str, n_global: int,
+                                 compress: bool = False) -> jax.Array:
+    """Row-sharded twin of :func:`_vq_infer_layer_body` (shard_map body).
+
+    ``plan``/``acts`` are this shard's row blocks of the padded global
+    tables; ``perm``/``slot_mask`` are this shard's slice of the SCAN
+    axis -- each shard sweeps S/ndev FULL batches per layer, so every
+    batch computes with exact full-batch in-batch positions and the
+    result is bit-identical to the replicated single-device executor
+    while compute and activation storage both split ndev ways.  Batch
+    outputs scatter cross-shard (``shard_scatter_rows``); wrap-padded
+    and all-masked (scan-padding) slots are diverted to the sacrificial
+    global row ``n_global``, which lives inside the padded table and is
+    never read back.  Requires S padded to a multiple of ndev
+    (all-masked batches) so the per-step collectives stay lockstep.
+    """
+    INFER_TRACE_COUNT["layer"] += 1
+    bk = BACKBONES[cfg.backbone]
+    cb_cfg = cfg.layer_codebook_cfg()
+    fi, fo = _layer_out_dims(cfg)[layer]
+    act = _act_for_layer(cfg, layer)
+
+    def body(out, xs):
+        bids, smask = xs
+        pack = plan_batch_sharded(plan, bids, axis_name, smask)
+        x_b = gather_from_shards(acts, bids, axis_name, compress=compress)
+        y = bk.vq_apply(params_l, x_b, None, pack, vq_state,
+                        degrees, cb_cfg, act, fi, fo, inject=False)
+        dst = jnp.where(smask > 0, bids, n_global).astype(jnp.int32)
+        return shard_scatter_rows(out, dst, y, axis_name), None
+
+    out0 = jnp.zeros((acts.shape[0], fo), acts.dtype)
+    out, _ = jax.lax.scan(body, out0, (perm, slot_mask))
+    return out
+
+
+def _vq_infer_layer_sharded(params_l, vq_state: LayerVQState,
+                            plan: EpochPlan, perm, slot_mask, acts,
+                            degrees, *, cfg: GNNConfig, layer: int,
+                            axis_name: str, n_global: int,
+                            inductive: bool = False,
+                            compress: bool = False
+                            ) -> tuple[jax.Array, LayerVQState]:
+    """Sharded twin of :func:`vq_infer_layer` (trace-level; the jit'd
+    shard_map wrapper lives in ``distributed/data_parallel.py``).  The
+    inductive refresh assigns each shard's LOCAL activation rows
+    (``assign_features_only`` is purely row-wise: it whitens with the
+    codebook's stored moments), all-gathers the per-shard assignment
+    stripes into the replicated global table, and slices off the pad
+    rows -- every shard derives the identical refreshed state, keeping
+    the replicated-codebook invariant."""
+    if inductive:
+        fi, _ = _layer_out_dims(cfg)[layer]
+        assign_loc = cbm.assign_features_only(
+            vq_state.codebook, acts, fi, cfg.layer_codebook_cfg())
+        a = jax.lax.all_gather(assign_loc, axis_name)  # [ndev, nb, n_loc]
+        assign = a.transpose(1, 0, 2).reshape(a.shape[1], -1)[:, :n_global]
+        vq_state = refresh_assignment(
+            vq_state, jnp.arange(n_global, dtype=jnp.int32), assign)
+    out = _vq_infer_layer_body_sharded(
+        params_l, vq_state, plan, perm, slot_mask, acts, degrees, cfg=cfg,
+        layer=layer, axis_name=axis_name, n_global=n_global,
+        compress=compress)
+    return out, vq_state
+
+
+def _vq_serve_body_sharded(params, vq_states, plan: EpochPlan,
+                           bids: jax.Array, x, degrees, cfg: GNNConfig, *,
+                           axis_name: str, compress: bool = False
+                           ) -> jax.Array:
+    """Sharded twin of :func:`vq_serve_batch` (shard_map body): the
+    request ids arrive REPLICATED, each shard cross-shard-gathers the
+    batch's plan rows and feature rows from its block and then runs the
+    identical full-batch probe-free forward -- exact parity with the
+    unsharded serve step, with the mesh buying graph-state capacity
+    (the O(b*L) serve compute is replicated; serve batches are tiny
+    next to the [n, D] state this path exists to split)."""
+    INFER_TRACE_COUNT["serve"] += 1
+    bids = bids.astype(jnp.int32)
+    pack = plan_batch_sharded(plan, bids, axis_name)
+    x_b = gather_from_shards(x, bids, axis_name, compress=compress)
+    out, _ = vq_forward(params, x_b, None, pack, vq_states, degrees,
                         cfg, inject=False)
     return out
 

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.core import codebook as cbm
 from repro.core.conv import refresh_assignment
-from repro.distributed.data_parallel import vq_train_epoch_dp
+from repro.distributed.data_parallel import ShardedGraphState, \
+    vq_train_epoch_dp, vq_train_epoch_sharded
 from repro.graph.batching import (build_epoch_plan, epoch_slices,
                                   full_operands, inference_slices,
                                   make_pack, minibatch_stream,
@@ -159,6 +160,7 @@ def train_full(g: Graph, cfg: GNNConfig, *, epochs: int, lr: float = 1e-2,
 def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
              lr: float = 3e-3, seed: int = 0, eval_every: int = 10,
              deg_cap: Optional[int] = None, mesh=None,
+             shard_graph: bool = False,
              batch_fn: Optional[Callable] = None) -> dict:
     """VQ-GNN training (Alg. 1).
 
@@ -172,6 +174,11 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
     numerically on a fixed seed.
     ``mesh`` (optional, a 1-axis "data" ``Mesh``) runs the epoch under
     ``shard_map`` data parallelism (``vq_train_epoch_dp``).
+    ``shard_graph`` (requires ``mesh``) additionally row-shards every
+    node-indexed table (EpochPlan / features / labels / train mask) over
+    the mesh (``vq_train_epoch_sharded``, DESIGN.md section 14), making
+    mesh size a graph-capacity knob; value-identical to the replicated
+    DP run at the same mesh size.
     ``batch_fn`` (optional, node task) overrides the per-epoch batch
     construction: ``batch_fn(rng) -> (ids [S, b'], slot_mask [S, b'])``
     with distinct ids per row -- the hook the VQ/sampling hybrid uses to
@@ -205,6 +212,10 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
         raise ValueError(
             "mesh= (shard_map data parallelism) requires the epoch "
             "executor: node task and REPRO_EPOCH_EXECUTOR != 0")
+    if shard_graph and mesh is None:
+        raise ValueError(
+            "shard_graph=True row-shards the node tables over a mesh -- "
+            "pass mesh= (graph_dp_mesh) as well")
     if mesh is not None:
         # surface epoch_slices' pool clamp here, against the caller's
         # numbers, instead of letting the dp divisibility check report a
@@ -215,9 +226,24 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
             raise ValueError(
                 f"effective batch size {eff_b} (batch_size={batch_size} "
                 f"clamped to the {g.n}-node pool) is not divisible by the "
-                f"data mesh size {nd}")
+                f"data mesh size {nd} -- each mesh device trains on "
+                f"b/{nd} rows of every batch"
+                + (f"; with shard_graph it also owns a contiguous "
+                   f"1/{nd} row block of the node tables (padded to a "
+                   f"multiple of {nd} rows internally), so only the "
+                   f"batch size needs adjusting: pick a multiple of {nd}"
+                   if shard_graph else ""))
     plan = build_epoch_plan(g, deg_cap, full_ops=ops) if use_epoch else None
     tm = jnp.asarray(train_mask)
+    sstate = None
+    if shard_graph:
+        # built once per run, like the plan: every node-indexed table is
+        # padded + row-placed here and the epoch loop ships only [S, b]
+        # id arrays.  ops/x stay host/replicated for _evaluate -- the
+        # capacity story is measured on the executor's operands
+        # (bench_epoch's graph_state_ratio), eval is offline.
+        sstate = ShardedGraphState(mesh, plan, x, ops.degrees,
+                                   labels=labels, train_mask=tm)
 
     hist, t0 = [], time.time()
     vq_errs = None
@@ -228,7 +254,10 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
                                        batch_size))
             ids_d = jnp.asarray(ids.astype(np.int32))
             smask_d = jnp.asarray(smask)
-            if mesh is not None:
+            if sstate is not None:
+                params, vq, ost, _, errs = vq_train_epoch_sharded(
+                    sstate, params, vq, ost, ids_d, smask_d, cfg, opt)
+            elif mesh is not None:
                 params, vq, ost, _, errs = vq_train_epoch_dp(
                     mesh, params, vq, ost, plan, ids_d, smask_d, x,
                     labels, tm, ops.degrees, cfg, opt)

@@ -153,6 +153,36 @@ def test_env_budget_silences_tuner(tuner_cache, monkeypatch):
     assert ops.spmm_ell_variant(512, 16) == "resident"
 
 
+def test_tuned_spmm_includes_stripe(tuner_cache):
+    """The spmm tuner races HBM stripe sizes under the same cache entry
+    and always records one (the resident variant carries the default)."""
+    cfg = autotune.tuned_spmm(500, 16)
+    assert cfg["stripe"] in (256, 512, 1024)
+    autotune.clear(memory_only=True)
+    assert autotune.tuned_spmm(500, 16)["stripe"] == cfg["stripe"]
+
+
+def test_tuned_stripe_flows_into_hbm_call(tuner_cache, monkeypatch):
+    """A tuned stripe reaches the HBM kernel through ops.spmm_ell, and a
+    pre-stripe cache entry (no 'stripe' key) still dispatches fine."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    keyr = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(keyr, 3)
+    ids = jax.random.randint(k1, (40, 4), 0, 200).astype(jnp.int32)
+    val = jax.random.normal(k2, (40, 4), jnp.float32)
+    x = jax.random.normal(k3, (200, 8), jnp.float32)
+    want = np.asarray(ref.spmm_ell(ids, val, x))
+    key = autotune.cache_key("spmm", (200, 8, 4), jnp.float32)
+    ops.configure_spmm_dispatch(reset=True)
+    autotune.record(key, {"variant": "hbm", "bb": 64, "stripe": 256})
+    assert_allclose(np.asarray(ops.spmm_ell(ids, val, x)), want,
+                    rtol=1e-5, atol=1e-5)
+    autotune.record(key, {"variant": "hbm", "bb": 64})  # legacy entry
+    autotune.clear(memory_only=True)                    # reload from file
+    assert_allclose(np.asarray(ops.spmm_ell(ids, val, x)), want,
+                    rtol=1e-5, atol=1e-5)
+
+
 def test_tuned_bb_flows_into_kernel_call(tuner_cache, monkeypatch):
     """ops.spmm_ell consumes the tuned block size end-to-end (forced
     Pallas interpret path) and stays parity-correct."""

@@ -1,0 +1,441 @@
+"""Row-sharded graph state tests (DESIGN.md section 14).
+
+Three rings, cheapest first:
+
+  * id-map unit tests for the ``distributed/sharding.py`` helpers;
+  * collective-level oracles for ``gather_from_shards`` /
+    ``shard_scatter_rows`` under ``jax.vmap(axis_name=...)`` -- 2 and 4
+    virtual lanes without needing real devices, covering shard-boundary
+    ids, non-divisible ``n % ndev`` padding, integer payloads, and the
+    int8 compressed-payload tolerance;
+  * executor parity: the sharded epoch executor vs the replicated DP
+    path at the same mesh size (and vs ``vq_train_epoch`` at ndev=1),
+    plus BIT-exact sharded inference (inductive refresh included) and
+    serving vs the replicated single-device executors -- natively when
+    enough devices exist (the CI sharded-executor job forces 4 virtual
+    CPU devices) and via an XLA_FLAGS subprocess everywhere else.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.codebook import CodebookConfig
+from repro.distributed.collectives import (gather_from_shards,
+                                           shard_scatter_rows)
+from repro.distributed.sharding import (global_to_local, graph_dp_mesh,
+                                        local_to_global, node_to_shard,
+                                        shard_padded_rows, shard_rows_spec)
+from repro.graph.batching import (build_epoch_plan, epoch_slices,
+                                  full_operands, inference_slices)
+from repro.graph.datasets import synthetic_arxiv
+from repro.models.gnn import (GNNConfig, init_gnn, init_vq_states,
+                              vq_infer_epoch, vq_serve_batch,
+                              vq_train_epoch)
+from repro.train.optimizer import rmsprop
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _copy(tree):
+    return jax.tree_util.tree_map(lambda a: a.copy(), tree)
+
+
+def _shards(table_pad, ndev):
+    """[n_pad, ...] -> [ndev, n_local, ...] contiguous row blocks (the
+    vmap stand-in for each lane's shard_map operand)."""
+    return table_pad.reshape((ndev, -1) + table_pad.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# id maps
+# ---------------------------------------------------------------------------
+
+def test_shard_padded_rows_contract():
+    # +1 sacrificial row, then round to a multiple of ndev
+    assert shard_padded_rows(300, 1) == 301
+    assert shard_padded_rows(300, 2) == 302
+    assert shard_padded_rows(301, 2) == 302
+    assert shard_padded_rows(301, 4) == 304
+    assert shard_padded_rows(7, 4) == 8
+    for n in (1, 7, 300, 301):
+        for nd in (1, 2, 3, 4):
+            npad = shard_padded_rows(n, nd)
+            assert npad % nd == 0 and npad >= n + 1
+    with pytest.raises(ValueError, match="positive"):
+        shard_padded_rows(10, 0)
+
+
+def test_id_maps_roundtrip():
+    n, ndev = 301, 4
+    n_pad = shard_padded_rows(n, ndev)
+    n_loc = n_pad // ndev
+    gids = np.arange(n_pad)
+    shards = node_to_shard(gids, n_loc)
+    assert shards.min() == 0 and shards.max() == ndev - 1
+    # contiguous-block ownership: equal blocks, ascending
+    assert (np.diff(shards) >= 0).all()
+    assert (np.bincount(shards) == n_loc).all()
+    loc = global_to_local(gids, shards, n_loc)
+    assert loc.min() == 0 and loc.max() == n_loc - 1
+    np.testing.assert_array_equal(local_to_global(loc, shards, n_loc), gids)
+    # wrap-pad rows (>= n, incl. the sacrificial row n) all live on the
+    # LAST shard for this (n, ndev): pinned to one owner, never split
+    assert (node_to_shard(np.arange(n, n_pad), n_loc) == ndev - 1).all()
+
+
+def test_shard_rows_spec_shapes():
+    assert shard_rows_spec() == jax.sharding.PartitionSpec("data")
+    assert shard_rows_spec(2) == jax.sharding.PartitionSpec("data", None)
+
+
+# ---------------------------------------------------------------------------
+# cross-shard gather / scatter under the vmap oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ndev", [2, 4])
+def test_gather_from_shards_matches_local_gather(ndev):
+    rng = np.random.default_rng(0)
+    n = 13                                     # n % ndev != 0: pad rows
+    n_pad = shard_padded_rows(n, ndev)
+    table = jnp.asarray(rng.standard_normal((n_pad, 5)), jnp.float32)
+    b = 6
+    ids = jnp.asarray(rng.integers(0, n, (ndev, b)), jnp.int32)
+    out = jax.vmap(lambda t, i: gather_from_shards(t, i, "d"),
+                   axis_name="d")(_shards(table, ndev), ids)
+    for s in range(ndev):
+        assert_allclose(np.asarray(out[s]),
+                        np.asarray(table)[np.asarray(ids[s])],
+                        rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("ndev", [2, 4])
+def test_gather_from_shards_boundary_and_pad_rows(ndev):
+    rng = np.random.default_rng(1)
+    n = 21
+    n_pad = shard_padded_rows(n, ndev)
+    n_loc = n_pad // ndev
+    table = jnp.asarray(rng.standard_normal((n_pad, 3)), jnp.float32)
+    # every shard edge (last row of shard s, first of s+1), the global
+    # sacrificial row n, and the last pad row
+    edge = []
+    for s in range(ndev):
+        edge += [s * n_loc, (s + 1) * n_loc - 1]
+    edge += [n, n_pad - 1]
+    ids = jnp.asarray(np.tile(edge, (ndev, 1)), jnp.int32)
+    out = jax.vmap(lambda t, i: gather_from_shards(t, i, "d"),
+                   axis_name="d")(_shards(table, ndev), ids)
+    for s in range(ndev):
+        assert_allclose(np.asarray(out[s]), np.asarray(table)[edge],
+                        rtol=0, atol=0)
+
+
+def test_gather_from_shards_integer_payload_exact():
+    rng = np.random.default_rng(2)
+    ndev, n = 2, 10
+    n_pad = shard_padded_rows(n, ndev)
+    table = jnp.asarray(rng.integers(-5000, 5000, (n_pad, 4)), jnp.int32)
+    ids = jnp.asarray(rng.integers(0, n, (ndev, 7)), jnp.int32)
+    out = jax.vmap(lambda t, i: gather_from_shards(t, i, "d"),
+                   axis_name="d")(_shards(table, ndev), ids)
+    assert out.dtype == jnp.int32
+    for s in range(ndev):
+        np.testing.assert_array_equal(np.asarray(out[s]),
+                                      np.asarray(table)[np.asarray(ids[s])])
+
+
+@pytest.mark.parametrize("ndev", [2, 4])
+def test_gather_from_shards_compressed_roundtrip(ndev):
+    # the int8 compressed payload quantizes every shard against one
+    # pmax-shared scale; with exactly one owner per row the roundtrip is
+    # exact up to a single quantization half-step
+    rng = np.random.default_rng(3)
+    n = 17
+    n_pad = shard_padded_rows(n, ndev)
+    table = jnp.asarray(rng.standard_normal((n_pad, 8)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, n, (ndev, 9)), jnp.int32)
+    out = jax.vmap(
+        lambda t, i: gather_from_shards(t, i, "d", compress=True),
+        axis_name="d")(_shards(table, ndev), ids)
+    step = float(jnp.max(jnp.abs(table))) / 127.0
+    for s in range(ndev):
+        assert_allclose(np.asarray(out[s]),
+                        np.asarray(table)[np.asarray(ids[s])],
+                        atol=0.51 * step, rtol=0)
+
+
+@pytest.mark.parametrize("ndev", [2, 4])
+def test_shard_scatter_rows_matches_global_set(ndev):
+    rng = np.random.default_rng(4)
+    n = 19
+    n_pad = shard_padded_rows(n, ndev)
+    table = jnp.asarray(rng.standard_normal((n_pad, 4)), jnp.float32)
+    b = 5
+    # globally-distinct real targets + every lane parking one write on
+    # the sacrificial row n (the wrap-pad diversion)
+    real = rng.permutation(n)[: ndev * (b - 1)].reshape(ndev, b - 1)
+    ids = np.concatenate([real, np.full((ndev, 1), n)], axis=1)
+    rows = rng.standard_normal((ndev, b, 4)).astype(np.float32)
+    out = jax.vmap(lambda t, i, r: shard_scatter_rows(t, i, r, "d"),
+                   axis_name="d")(
+        _shards(table, ndev), jnp.asarray(ids, jnp.int32),
+        jnp.asarray(rows))
+    merged = np.asarray(out).reshape(n_pad, 4)
+    expect = np.asarray(table).copy()
+    for s in range(ndev):
+        for j in range(b - 1):
+            expect[ids[s, j]] = rows[s, j]
+    # every row except the sacrificial one must match exactly
+    keep = np.arange(n_pad) != n
+    np.testing.assert_array_equal(merged[keep], expect[keep])
+
+
+# ---------------------------------------------------------------------------
+# executor parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def g():
+    # n chosen so n % 2 != 0 and n % 4 != 0: every mesh pads rows, and
+    # S = ceil(301/64) = 5 batches also pads the inference scan axis
+    return synthetic_arxiv(n=301, seed=0)
+
+
+@pytest.fixture(scope="module")
+def setup(g):
+    cfg = GNNConfig(backbone="gcn", f_in=g.f, hidden=32,
+                    n_out=g.num_classes, n_layers=2,
+                    codebook=CodebookConfig(k=32, f_prod=4))
+    ops = full_operands(g)
+    tm = np.zeros(g.n, np.float32)
+    tm[g.train_idx] = 1.0
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    vq = init_vq_states(jax.random.PRNGKey(1), cfg, g.n)
+    opt = rmsprop(3e-3)
+    rng = np.random.default_rng(0)
+    ids, sm = epoch_slices(rng.permutation(np.arange(g.n)), 64)
+    return dict(cfg=cfg, ops=ops, x=jnp.asarray(g.features),
+                labels=jnp.asarray(g.labels), tm=jnp.asarray(tm),
+                params=params, vq=vq, opt=opt, ost=opt.init(params),
+                plan=build_epoch_plan(g),
+                ids=jnp.asarray(ids.astype(np.int32)), sm=jnp.asarray(sm))
+
+
+def _sharded_state(mesh, s):
+    from repro.distributed.data_parallel import ShardedGraphState
+    return ShardedGraphState(mesh, s["plan"], s["x"], s["ops"].degrees,
+                             labels=s["labels"], train_mask=s["tm"])
+
+
+def test_sharded_epoch_matches_single_device_executor(g, setup):
+    # ndev=1 instantiation: the cross-shard gathers degenerate to local
+    # gathers and the run must match the plain executor
+    from repro.distributed.data_parallel import vq_train_epoch_sharded
+    s = setup
+    mesh = graph_dp_mesh(1)
+    st = _sharded_state(mesh, s)
+    p1, v1, o1, l1, e1 = vq_train_epoch(
+        _copy(s["params"]), _copy(s["vq"]), _copy(s["ost"]), s["plan"],
+        s["ids"], s["sm"], s["x"], s["labels"], s["tm"],
+        s["ops"].degrees, s["cfg"], s["opt"])
+    p2, v2, o2, l2, e2 = vq_train_epoch_sharded(
+        st, _copy(s["params"]), _copy(s["vq"]), _copy(s["ost"]),
+        s["ids"], s["sm"], s["cfg"], s["opt"])
+    assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6, atol=1e-7)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+    for a, b in zip(jax.tree_util.tree_leaves(v1),
+                    jax.tree_util.tree_leaves(v2)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_sharded_inference_and_serve_exact_at_one_device(g, setup):
+    from repro.distributed.data_parallel import (vq_infer_epoch_sharded,
+                                                 vq_serve_batch_sharded)
+    s = setup
+    mesh = graph_dp_mesh(1)
+    st = _sharded_state(mesh, s)
+    iids, ism = inference_slices(g.n, 64)
+    iids_d = jnp.asarray(iids.astype(np.int32))
+    ism_d = jnp.asarray(ism)
+    ref, states_ref = vq_infer_epoch(
+        s["params"], s["vq"], s["plan"], iids_d, ism_d, s["x"],
+        s["ops"].degrees, s["cfg"], inductive=True)
+    out, states = vq_infer_epoch_sharded(
+        st, s["params"], s["vq"], iids_d, ism_d, s["cfg"], inductive=True)
+    np.testing.assert_array_equal(np.asarray(ref), st.unshard(out))
+    for a, b in zip(jax.tree_util.tree_leaves(states_ref),
+                    jax.tree_util.tree_leaves(states)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    bids = jnp.asarray((np.arange(48) * 7) % g.n, jnp.int32)
+    y_ref = vq_serve_batch(s["params"], s["vq"], s["plan"], bids, s["x"],
+                           s["ops"].degrees, s["cfg"])
+    y = vq_serve_batch_sharded(st, s["params"], s["vq"], bids, s["cfg"])
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y))
+
+
+def _multi_device_parity(g, s, ndev):
+    """Shared body of the native 2-/4-device parity tests: sharded epoch
+    vs replicated DP at the same mesh, bit-exact sharded inference (with
+    inductive refresh) and serve vs the replicated ndev=1 executors, and
+    the per-device capacity drop."""
+    from repro.distributed.data_parallel import (
+        vq_infer_epoch_sharded, vq_serve_batch_sharded,
+        vq_train_epoch_dp, vq_train_epoch_sharded)
+    mesh = graph_dp_mesh(ndev)
+    st = _sharded_state(mesh, s)
+
+    # --- capacity: per-device graph-state bytes drop ~1/ndev ---
+    repl = sum(int(t.nbytes) for t in (
+        s["plan"].nbr_ids, s["plan"].nbr_mask, s["plan"].rev_ids,
+        s["plan"].rev_mask, s["x"], s["labels"], s["tm"],
+        s["ops"].degrees))
+    assert st.per_device_bytes() <= 0.6 * repl
+
+    # --- epoch: sharded == replicated DP at the same mesh size ---
+    p1, v1, o1, l1, e1 = vq_train_epoch_dp(
+        mesh, _copy(s["params"]), _copy(s["vq"]), _copy(s["ost"]),
+        s["plan"], s["ids"], s["sm"], s["x"], s["labels"], s["tm"],
+        s["ops"].degrees, s["cfg"], s["opt"])
+    p2, v2, o2, l2, e2 = vq_train_epoch_sharded(
+        st, _copy(s["params"]), _copy(s["vq"]), _copy(s["ost"]),
+        s["ids"], s["sm"], s["cfg"], s["opt"])
+    assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-6, atol=2e-7)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-7)
+    # codebook counts/sums/revival + assignment tables stay synchronized
+    for a, b in zip(jax.tree_util.tree_leaves(v1),
+                    jax.tree_util.tree_leaves(v2)):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-6, atol=1e-6)
+
+    # --- inference: BIT-exact vs replicated ndev=1 (scan-axis split) ---
+    iids, ism = inference_slices(g.n, 64)
+    iids_d = jnp.asarray(iids.astype(np.int32))
+    ism_d = jnp.asarray(ism)
+    ref, states_ref = vq_infer_epoch(
+        s["params"], s["vq"], s["plan"], iids_d, ism_d, s["x"],
+        s["ops"].degrees, s["cfg"], inductive=True)
+    out, states = vq_infer_epoch_sharded(
+        st, s["params"], s["vq"], iids_d, ism_d, s["cfg"], inductive=True)
+    np.testing.assert_array_equal(np.asarray(ref), st.unshard(out))
+    for a, b in zip(jax.tree_util.tree_leaves(states_ref),
+                    jax.tree_util.tree_leaves(states)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # --- serve: bit-exact, duplicate ids included ---
+    bids = np.concatenate([(np.arange(40) * 7) % g.n, np.zeros(8, int)])
+    bids = jnp.asarray(bids, jnp.int32)
+    y_ref = vq_serve_batch(s["params"], s["vq"], s["plan"], bids, s["x"],
+                           s["ops"].degrees, s["cfg"])
+    y = vq_serve_batch_sharded(st, s["params"], s["vq"], bids, s["cfg"])
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (CI runs via XLA_FLAGS)")
+def test_sharded_two_device_parity_native(g, setup):
+    _multi_device_parity(g, setup, 2)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >= 4 devices (CI sharded-executor job)")
+def test_sharded_four_device_parity_native(g, setup):
+    _multi_device_parity(g, setup, 4)
+
+
+@pytest.mark.skipif(len(jax.devices()) >= 2,
+                    reason="covered natively above")
+def test_sharded_two_device_parity_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2")
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         os.path.join(os.path.dirname(__file__),
+                      "test_sharded_state.py"),
+         "-k", "test_sharded_two_device_parity_native"],
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "1 passed" in out.stdout
+
+
+def test_sharded_epoch_compress_payload_trains(g, setup):
+    # the int8 feature-gather payload is lossy but must keep the epoch
+    # finite and close to the exact path (single mesh device: the
+    # quantize/dequant roundtrip is the only difference)
+    from repro.distributed.data_parallel import vq_train_epoch_sharded
+    s = setup
+    st = _sharded_state(graph_dp_mesh(1), s)
+    p, v, o, losses, errs = vq_train_epoch_sharded(
+        st, _copy(s["params"]), _copy(s["vq"]), _copy(s["ost"]),
+        s["ids"], s["sm"], s["cfg"], s["opt"], compress=True)
+    assert np.isfinite(np.asarray(losses)).all()
+    assert np.isfinite(np.asarray(errs)).all()
+
+
+# ---------------------------------------------------------------------------
+# actionable misconfiguration errors (issue satellite)
+# ---------------------------------------------------------------------------
+
+def test_graph_dp_mesh_error_names_sharded_requirements():
+    want = len(jax.devices()) + 1
+    with pytest.raises(ValueError, match="sharded graph"):
+        graph_dp_mesh(want)
+    with pytest.raises(ValueError, match="shard_padded_rows"):
+        graph_dp_mesh(want)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        graph_dp_mesh(want)
+
+
+def test_train_vq_divisibility_error_names_sharded_requirements(g):
+    from repro.train.gnn_trainer import train_vq
+
+    class _StubMesh:
+        shape = {"data": 2}
+
+    cfg = GNNConfig(backbone="gcn", f_in=g.f, hidden=16,
+                    n_out=g.num_classes, n_layers=2,
+                    codebook=CodebookConfig(k=16, f_prod=4))
+    with pytest.raises(ValueError, match="clamped to the 301-node pool"):
+        train_vq(g, cfg, epochs=1, batch_size=333, mesh=_StubMesh())
+    with pytest.raises(ValueError, match="shard_graph"):
+        train_vq(g, cfg, epochs=1, batch_size=333, mesh=_StubMesh(),
+                 shard_graph=True)
+    with pytest.raises(ValueError, match="pass mesh="):
+        train_vq(g, cfg, epochs=1, batch_size=64, shard_graph=True)
+
+
+def test_sharded_state_requires_labels_to_train(g, setup):
+    from repro.distributed.data_parallel import (ShardedGraphState,
+                                                 vq_train_epoch_sharded)
+    s = setup
+    st = ShardedGraphState(graph_dp_mesh(1), s["plan"], s["x"],
+                           s["ops"].degrees)
+    with pytest.raises(ValueError, match="labels"):
+        vq_train_epoch_sharded(st, _copy(s["params"]), _copy(s["vq"]),
+                               _copy(s["ost"]), s["ids"], s["sm"],
+                               s["cfg"], s["opt"])
+
+
+def test_gnn_server_sharded_matches_unsharded(g, setup):
+    from repro.launch.serve_gnn import GNNServer
+    s = setup
+    ref = GNNServer(g, s["cfg"], s["params"], s["vq"], batch=64)
+    srv = GNNServer(g, s["cfg"], s["params"], s["vq"], batch=64,
+                    mesh=graph_dp_mesh(1), shard_graph=True)
+    ref.refresh(), srv.refresh()
+    req = (np.arange(100) * 3) % g.n
+    np.testing.assert_array_equal(ref.serve(req), srv.serve(req))
+    # sharding never grows the per-device footprint (at ndev=1 the only
+    # delta is the padded sacrificial row)
+    assert srv.graph_state_bytes_per_device() <= \
+        1.1 * ref.graph_state_bytes_per_device()
+    with pytest.raises(ValueError, match="pass mesh="):
+        GNNServer(g, s["cfg"], s["params"], s["vq"], batch=64,
+                  shard_graph=True)

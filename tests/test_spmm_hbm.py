@@ -86,6 +86,66 @@ def test_spmm_ell_hbm_all_padding_rows():
 
 
 # ---------------------------------------------------------------------------
+# int8 source rows consumed natively (x_scale epilogue dequant)
+# ---------------------------------------------------------------------------
+
+def _quantize_per_channel(x):
+    """Per-channel symmetric int8 quantization of a [n, f] f32 matrix."""
+    scale = (jnp.max(jnp.abs(x), axis=0, keepdims=True) / 127.0 + 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+@pytest.mark.parametrize("b,deg,n,f", [
+    (8, 4, 16, 8),
+    (33, 7, 50, 12),          # non-multiple tiles
+    (128, 16, 3000, 32),      # many stripes per tile
+])
+def test_spmm_ell_hbm_int8_scale_parity(b, deg, n, f):
+    """int8 stripes DMA natively; the epilogue scale must reproduce the
+    dequantize-up-front result (scale commutes with the neighbor sum)."""
+    idx, val, x = _case(b, deg, n, f)
+    q, scale = _quantize_per_channel(x)
+    got = spmm_ell_hbm_pallas(idx, val, q, x_scale=scale, interpret=True)
+    want = ref.spmm_ell(idx, val, q.astype(jnp.float32) * scale)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_ell_hbm_int8_matches_resident_q_kernel():
+    """Both variants dequantize in-kernel: HBM int8 output matches the
+    resident quantized kernel's on the same operands."""
+    idx, val, x = _case(60, 6, 400, 16)
+    q, scale = _quantize_per_channel(x)
+    hbm = spmm_ell_hbm_pallas(idx, val, q, x_scale=scale, bb=32, stripe=64,
+                              interpret=True)
+    resident = spmm_ell_pallas(idx, val, q, x_scale=scale, interpret=True)
+    assert_allclose(np.asarray(hbm), np.asarray(resident),
+                    rtol=1e-6, atol=1e-6)
+
+
+def test_spmm_ell_hbm_int8_precomputed_index():
+    idx, val, x = _case(75, 8, 400, 32)
+    q, scale = _quantize_per_channel(x)
+    si = make_stripe_index(np.asarray(idx), x.shape[0], bb=32, stripe=64)
+    got = spmm_ell_hbm_pallas(idx, val, q, si, x_scale=scale,
+                              interpret=True)
+    want = ref.spmm_ell(idx, val, q.astype(jnp.float32) * scale)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_ops_dispatch_routes_hbm_int8(monkeypatch):
+    """ops.spmm_ell with an int8 x + x_scale forced onto the HBM variant:
+    no up-front dequant materialization, still oracle-parity."""
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    monkeypatch.setenv("REPRO_SPMM_VARIANT", "hbm")
+    idx, val, x = _case(60, 6, 333, 16)
+    q, scale = _quantize_per_channel(x)
+    got = ops.spmm_ell(idx, val, q, x_scale=scale)
+    want = ref.spmm_ell(idx, val, q.astype(jnp.float32) * scale)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # stripe index: host builder vs in-jit fallback
 # ---------------------------------------------------------------------------
 
