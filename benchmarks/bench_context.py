@@ -24,6 +24,13 @@ Two entry points (the ``benchmarks/run.py`` convention):
         the streaming backward must be <= 0.5x the materialized form's
         (deterministic: counted from the residual arrays jax actually
         saves, no wall-clock noise).
+      * ``context/a4_*`` -- the nibble-packed assignment tier (DESIGN.md
+        section 15): fused-kernel parity on a packed table + fp8
+        codewords, exact packed-table bytes (<= 0.5x uint8, <= 0.125x
+        int32), the fused-dispatch crossover extension (>= 2x the uint8
+        tier's node count, probed from ``context_ell_variant`` itself),
+        and the loop-vs-fused regime timing at a budget between the two
+        thresholds.
       * interpret-mode kernel parity vs the oracle (maxerr), the
         bench_kernels convention.
   run() -> legacy (name, us, derived) tuples for the CSV printer.
@@ -40,7 +47,8 @@ from repro.core.message_passing import (ConvOperands, approx_message_passing,
                                         context_messages_reconstruct,
                                         inject_context_grad_materialized,
                                         intra_messages, reconstruct)
-from repro.distributed.quantization import quantize_codewords
+from repro.distributed.quantization import (PackedAssignment,
+                                            quantize_codewords, tree_bytes)
 from repro.kernels import ops, ref
 from repro.kernels.context_ell import context_ell_pallas
 
@@ -48,6 +56,10 @@ _FWD_GATE = {"fused_over_loop": 1.0 / 1.5}   # fused must be >= 1.5x
 _RES_GATE = {"residual_ratio": 0.5}          # streaming residual <= 0.5x
 _INT8_GATE = {"int8_over_fp32": 1.0 / 1.3}   # int8 path must be >= 1.3x
 _MEM_GATE = {"int8_operand_ratio": 0.5}      # int8 operand bytes <= 0.5x
+_A4_GATE = {"a4_over_uint8": 1.0 / 1.3}      # packed path must be >= 1.3x
+_A4_MEM_GATE = {"a4_over_uint8_bytes": 0.5,  # packed table <= 0.5x uint8
+                "a4_over_int32_bytes": 0.125}    # ... <= 0.125x int32
+_A4_CROSS_GATE = {"uint8_over_a4_crossover": 0.5}    # crossover n >= 2x
 
 
 def _context_case(b, deg, n, nb, k, f_blk, seed=0):
@@ -222,6 +234,89 @@ def run_structured() -> list[dict]:
            {"fp32_mb": fp32_bytes / 2**20, "int8_mb": int8_bytes / 2**20,
             "int8_operand_ratio": int8_bytes / fp32_bytes},
            tolerance=_MEM_GATE)
+
+    # --- nibble-packed int4 assignment tables + fp8 codewords (the +a4 /
+    # fp8 tiers, DESIGN.md section 15).  Parity first, the int8 convention:
+    # the fused kernel on a PACKED uint4 table (shift/mask unpack inside
+    # the kernel) + fp8 codewords must reproduce the oracle on the
+    # dequantized tables exactly ---
+    ids, val, assign, cw = _context_case(512, 8, 5000, 4, 16, 8)
+    qcw8 = quantize_codewords(cw, dtype=jnp.float8_e4m3fn)
+    deq8 = qcw8.q.astype(jnp.float32) * qcw8.scale
+    pa = PackedAssignment.pack(assign.astype(jnp.uint8))
+    got = context_ell_pallas(ids, val, pa, qcw8.q, cw_scale=qcw8.scale,
+                             interpret=True)
+    want = ref.context_ell(ids, val, assign, deq8)
+    us = _time(lambda a, b_, c, d, e: context_ell_pallas(
+        a, b_, c, d, cw_scale=e, interpret=True), ids, val, pa, qcw8.q,
+        qcw8.scale)
+    _entry(rows, "context/a4_fp8_kernel_parity/512x8_nb4_k16", us,
+           {"maxerr": float(jnp.abs(got - want).max())},
+           tolerance={"maxerr": 1e-3})
+
+    # --- table bytes: 2 ids/byte halves the uint8 tier's table (8x vs
+    # int32); exact sub-byte accounting via the shared tree_bytes ---
+    b, deg, n, nb, k, f_blk = 4096, 16, 200_000, 4, 16, 8
+    ids, val, assign, cw = _context_case(b, deg, n, nb, k, f_blk)
+    qcw = quantize_codewords(cw)
+    ua = assign.astype(jnp.uint8)
+    pa = PackedAssignment.pack(ua)
+    a4_bytes = tree_bytes((pa,))
+    u8_bytes = tree_bytes((ua,))
+    i32_bytes = tree_bytes((assign,))
+    _entry(rows, f"context/a4_table_bytes/nb{nb}_k{k}_n200k", 0.0,
+           {"int32_mb": i32_bytes / 2**20, "uint8_mb": u8_bytes / 2**20,
+            "a4_mb": a4_bytes / 2**20,
+            "a4_over_uint8_bytes": a4_bytes / u8_bytes,
+            "a4_over_int32_bytes": a4_bytes / i32_bytes},
+           tolerance=_A4_MEM_GATE)
+
+    # --- the tentpole dispatch claim: at a fixed VMEM budget the packed
+    # table's fused-dispatch crossover sits at >= 2x the uint8 tier's
+    # node count (found by probing ``context_ell_variant`` itself, so the
+    # gate can never drift from the shipped heuristic).  At a budget
+    # between the two thresholds ([4, 200k]: uint8 0.76 MiB > 0.5 MiB,
+    # packed 0.38 MiB < 0.5 MiB) the uint8 table falls back to the
+    # per-branch loop while the packed table keeps the ONE fused dispatch;
+    # the timing compares those regimes at the op-dispatch level (the
+    # int8_vs_fp32 convention: eager ``_context_ell_loop`` vs one
+    # ``ops.context_ell`` call), both on the SAME int8 codewords so the
+    # row isolates the assignment-packing lever ---
+    def _crossover(itemsize, dt):
+        lo, hi = 1, 1
+        while ops.context_ell_variant(hi, nb, itemsize, dtype=dt) == "fused":
+            lo, hi = hi, hi * 2
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if ops.context_ell_variant(mid, nb, itemsize, dtype=dt) == "fused":
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+    ops.configure_context_dispatch(reset=True, vmem_budget_mb=0.5)
+    cross_u8 = _crossover(1, jnp.uint8)
+    cross_a4 = _crossover(0.5, jnp.uint4)
+    v8 = ops.context_ell_variant(n, nb, 1, dtype=jnp.uint8)
+    v4 = ops.context_ell_variant(n, nb, 0.5, dtype=jnp.uint4)
+    assert v8 == "loop" and v4 == "fused", (v8, v4)
+    us_u8 = _time(lambda a, v_, s, q, sc: ops._context_ell_loop(
+        a, v_, s, q, None, sc), ids, val, ua, qcw.q, qcw.scale)
+    us_a4 = _time(ops.context_ell, ids, val, pa, qcw)
+    ops.configure_context_dispatch(reset=True)
+    _entry(rows, f"context/a4_vs_uint8_dispatch/nb{nb}_k{k}_b{b}", us_a4,
+           {"us_a4": us_a4, "us_uint8": us_u8,
+            "speedup": us_u8 / max(us_a4, 1e-9),
+            "a4_over_uint8": us_a4 / max(us_u8, 1e-9),
+            "uint8_variant_at_0p5mb": 1.0 if v8 == "loop" else 0.0,
+            "a4_variant_at_0p5mb": 0.0 if v4 == "fused" else 1.0},
+           tolerance=_A4_GATE)
+    _entry(rows, f"context/a4_crossover/nb{nb}_budget0p5mb", 0.0,
+           {"crossover_n_uint8": float(cross_u8),
+            "crossover_n_a4": float(cross_a4),
+            "extension": cross_a4 / max(cross_u8, 1),
+            "uint8_over_a4_crossover": cross_u8 / max(cross_a4, 1)},
+           tolerance=_A4_CROSS_GATE)
 
     # --- streaming vs materialized Eq. 7 backward: wall time of the full
     # jitted value_and_grad, plus the MEASURED vjp residual bytes (what the

@@ -27,6 +27,7 @@ import numpy as np
 
 from benchmarks.bench_kernels import _entry, time_best_s
 from repro.core.codebook import CodebookConfig
+from repro.distributed.quantization import tree_bytes
 from repro.graph.batching import (build_epoch_plan, full_operands,
                                   inference_slices)
 from repro.graph.datasets import synthetic_arxiv
@@ -43,6 +44,9 @@ _GATE = {"executor_over_eager": 0.5}   # executor >= 2x the eager loop
 _SHARD_GATE = {"graph_state_ratio": 0.6}
 _INT8_GATE = {"int8_acc_drop": 0.02}   # int8 serving parity (ISSUE 7)
 _MEM_GATE = {"int8_state_ratio": 0.5}  # quantized operands <= half fp32
+_FP8_GATE = {"fp8_acc_drop": 0.02}     # fp8 serving parity (ISSUE 9)
+_A4_GATE = {"disagreement_vs_int8": 0.0,   # nibble packing is lossless
+            "a4_table_ratio": 0.5}         # packed table <= half uint8
 
 
 def _executor_vs_eager_rows(rows: list, n: int, batch: int, hidden: int,
@@ -174,6 +178,47 @@ def run_structured() -> list[dict]:
            {"fp32_bytes": fp32_b, "int8_bytes": int8_b,
             "int8_state_ratio": int8_b / fp32_b},
            tolerance=_MEM_GATE)
+
+    # --- fp8 serving tier: the SAME trained model with float8_e4m3fn
+    # codeword snapshots (uint8 assignment tables, identical wire bytes to
+    # int8).  Same accuracy-parity gate as the int8 row (ISSUE 9) ---
+    vqf8 = quantize_vq_states(vq, cfg, precision="fp8")
+    t0 = time.time()
+    approxf8 = vq_inference(params, vqf8, g, cfg, batch_size=400)
+    t_vqf8 = time.time() - t0
+    accf8 = float(node_metric(jnp.asarray(approxf8)[g.val_idx],
+                              labels[g.val_idx], False))
+    agreef8 = float((np.argmax(approx, -1) ==
+                     np.argmax(np.asarray(approxf8), -1)).mean())
+    _entry(rows, "inference/fp8_vq_minibatch", t_vqf8 * 1e6,
+           {"acc": accf8, "agreement_vs_fp32": agreef8,
+            "fp8_acc_drop": max(0.0, acc_vq - accf8)},
+           tolerance=_FP8_GATE)
+
+    # --- +a4 nibble-packed assignment tables (k <= 16): packing is
+    # LOSSLESS, so int8+a4 inference must agree with plain-int8 inference
+    # prediction-for-prediction, while the packed tables halve the uint8
+    # tier's assignment bytes (exact sub-byte accounting via tree_bytes) ---
+    cfg16 = GNNConfig(backbone="gcn", f_in=g.f, hidden=64,
+                      n_out=g.num_classes, n_layers=2,
+                      codebook=CodebookConfig(k=16, f_prod=4))
+    params16 = init_gnn(jax.random.PRNGKey(2), cfg16)
+    vq16 = init_vq_states(jax.random.PRNGKey(3), cfg16, g.n)
+    vq16_int8 = quantize_vq_states(vq16, cfg16, precision="int8")
+    vq16_a4 = quantize_vq_states(vq16, cfg16, precision="int8+a4")
+    y_int8 = vq_inference(params16, vq16_int8, g, cfg16, batch_size=400)
+    t0 = time.time()
+    y_a4 = vq_inference(params16, vq16_a4, g, cfg16, batch_size=400)
+    t_a4 = time.time() - t0
+    disagree = float((np.argmax(np.asarray(y_int8), -1) !=
+                      np.argmax(np.asarray(y_a4), -1)).mean())
+    u8_tab = sum(tree_bytes((st.assignment,)) for st in vq16_int8)
+    a4_tab = sum(tree_bytes((st.assignment,)) for st in vq16_a4)
+    _entry(rows, "inference/int8_a4_vq_minibatch", t_a4 * 1e6,
+           {"disagreement_vs_int8": disagree,
+            "uint8_table_bytes": u8_tab, "a4_table_bytes": a4_tab,
+            "a4_table_ratio": a4_tab / u8_tab},
+           tolerance=_A4_GATE)
     return rows
 
 

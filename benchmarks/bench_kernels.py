@@ -23,6 +23,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.quantization import (pack_nibbles, quantize_tensor,
+                                            unpack_nibbles)
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.spmm_ell import spmm_ell_pallas
@@ -167,6 +169,48 @@ def run_structured() -> list[dict]:
                {"maxerr": float(jnp.abs(got_h - want).max()),
                 "dispatch": variant},
                tolerance={"maxerr": 1e-3})
+
+    # --- fp8 operand tier: both spmm variants on float8_e4m3fn source rows
+    # + f32 per-channel scales must match the oracle on the DEQUANTIZED
+    # rows (the int8-parity convention: upcast-in-kernel + one f32 dequant
+    # epilogue reproduce the quantization grid exactly) ---
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(77), 3)
+    idx = jax.random.randint(k1, (256, 16), 0, 4096)
+    val = jax.random.normal(k2, (256, 16))
+    xs = jax.random.normal(k3, (4096, 64))
+    qt = quantize_tensor(xs, dtype=jnp.float8_e4m3fn)
+    deq = qt.q.astype(jnp.float32) * qt.scale
+    want = ref.spmm_ell(idx, val, deq)
+    got_r = spmm_ell_pallas(idx, val, qt.q, x_scale=qt.scale, interpret=True)
+    got_h = spmm_ell_hbm_pallas(idx, val, qt.q, x_scale=qt.scale,
+                                interpret=True)
+    us_r = _time(lambda a, cc, x_, s: spmm_ell_pallas(
+        a, cc, x_, x_scale=s, interpret=True), idx, val, qt.q, qt.scale)
+    _entry(rows, "kernel/spmm_ell_fp8_resident/256x16_src4096x64", us_r,
+           {"maxerr": float(jnp.abs(got_r - want).max())},
+           tolerance={"maxerr": 1e-3})
+    _entry(rows, "kernel/spmm_ell_fp8_hbm/256x16_src4096x64", 0.0,
+           {"maxerr": float(jnp.abs(got_h - want).max())},
+           tolerance={"maxerr": 1e-3})
+
+    # --- uint4 assignment emission (the +a4 tiers): the kernel's narrow
+    # emit must agree with the int32 emit id-for-id at k <= 16, and the
+    # packed table must round-trip through pack/unpack bit-exactly ---
+    xq = jax.random.normal(jax.random.PRNGKey(78), (512, 8))
+    cq = jax.random.normal(jax.random.PRNGKey(79), (16, 8))
+    i32, _, _, _ = vq_assign_update_pallas(xq, cq, interpret=True)
+    i4, _, _, _ = vq_assign_update_pallas(xq, cq, interpret=True,
+                                          emit_dtype=jnp.uint4)
+    packed = pack_nibbles(i4[None].astype(jnp.uint8))
+    round_trip = unpack_nibbles(packed, i4.shape[0])[0]
+    us4 = _time(lambda a, b_: vq_assign_update_pallas(
+        a, b_, interpret=True, emit_dtype=jnp.uint4), xq, cq)
+    _entry(rows, "kernel/vq_update_emit_uint4/512x16x8", us4,
+           {"idx_match": float((i4.astype(jnp.int32) == i32).mean()),
+            "pack_roundtrip_match":
+                float((round_trip.astype(jnp.int32) == i32).mean()),
+            "idx_mismatches": float((i4.astype(jnp.int32) != i32).sum())},
+           tolerance={"idx_mismatches": 0.0})
 
     # --- flash attention ---
     q, k, v = (jax.random.normal(kk, (1, 4, 512, 64))

@@ -13,6 +13,16 @@ when any row with a tolerance is out of tolerance (kernel-vs-oracle parity
 deltas).  Suites expose ``run_structured()`` for this; suites that only
 have ``run()`` are wrapped with pass=True rows.
 
+Baseline refresh (after a PR intentionally moves gated metrics):
+
+    python -m benchmarks.run --update-baselines [suite ...]
+
+re-runs each named suite (default: every suite with a committed snapshot
+under ``benchmarks/baselines/``) and rewrites its BENCH_<suite>.json from
+the fresh rows.  It REFUSES to run on a dirty git tree, so a refreshed
+baseline always corresponds to an exact committed code state -- commit the
+code first, regenerate, then commit the baselines on top.
+
   Table 2  -> bench_complexity
   Table 3  -> bench_memory
   Fig. 4   -> bench_convergence
@@ -130,8 +140,55 @@ def run_suite_structured(name: str, json_path: str | None, check: bool,
         raise SystemExit(1)
 
 
+def update_baselines(suites: list[str]) -> None:
+    """Re-run ``suites`` and rewrite their committed baseline snapshots.
+
+    Refuses on a dirty git tree (module docstring): the trend gate
+    compares against "the metrics at commit X", which only means something
+    when the snapshot was generated from exactly that tree.
+    """
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    base_dir = os.path.join(here, "benchmarks", "baselines")
+    dirty = subprocess.run(
+        ["git", "status", "--porcelain"], capture_output=True, text=True,
+        cwd=here).stdout.strip()
+    if dirty:
+        raise SystemExit(
+            "--update-baselines refuses to run on a dirty git tree "
+            "(baselines must snapshot a committed code state); commit or "
+            f"stash first:\n{dirty}")
+    if not suites:
+        suites = sorted(
+            f[len("BENCH_"):-len(".json")]
+            for f in os.listdir(base_dir)
+            if f.startswith("BENCH_") and f.endswith(".json"))
+    unknown = [s for s in suites if s not in SUITES]
+    if unknown:
+        raise SystemExit(f"unknown suite(s) {unknown}; want {SUITES}")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "src"), here, env.get("PYTHONPATH", "")])
+    for name in suites:
+        path = os.path.join(base_dir, f"BENCH_{name}.json")
+        print(f"regenerating {path} ...")
+        sys.stdout.flush()
+        # per-suite subprocess isolation, the run-all convention
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", name,
+             "--json", path, "--check"],
+            env=env, cwd=here, timeout=3600)
+        if proc.returncode != 0:
+            raise SystemExit(
+                f"suite {name!r} failed its own tolerances; baseline NOT "
+                f"to be committed in this state")
+
+
 def main() -> None:
     argv = sys.argv[1:]
+    if "--update-baselines" in argv:
+        argv.remove("--update-baselines")
+        update_baselines(argv)
+        return
     json_path = None
     baseline_path = None
     check = False

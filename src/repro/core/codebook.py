@@ -188,22 +188,25 @@ def gradient_codewords(state: CodebookState, f_feat: int,
 def quantized_codewords(state: CodebookState, f_feat: int,
                         cfg: CodebookConfig, *,
                         prev_feat: Optional[quantization.QTensor] = None,
-                        prev_grad: Optional[quantization.QTensor] = None
+                        prev_grad: Optional[quantization.QTensor] = None,
+                        dtype=jnp.int8
                         ) -> tuple[quantization.QTensor, quantization.QTensor]:
-    """int8 kernel operands of the (feature, gradient) codeword tables.
+    """Quantized kernel operands of the (feature, gradient) codeword tables.
 
-    The quantize-on-update hook of the int8 path (DESIGN.md section 13):
-    each table becomes a QTensor with per-branch/per-channel scales
+    The quantize-on-update hook of the quantized tiers (DESIGN.md sections
+    13/15): each table becomes a QTensor with per-branch/per-channel scales
     ([nb, 1, f_blk], amax over the k codewords only) -- the exact layout
-    ``kops.context_ell`` dequantizes in one epilogue row.  Passing the
-    previous step's QTensors enables the drift-aware rescale: the
-    quantization grid is reused while the EMA step barely moves the table,
-    keeping serving-side int8 bytes stable across refreshes.
+    ``kops.context_ell`` dequantizes in one epilogue row.  ``dtype`` picks
+    int8 or float8_e4m3fn storage for a fresh snapshot; passing the
+    previous step's QTensors pins the dtype to theirs and enables the
+    drift-aware rescale: the quantization grid is reused while the EMA
+    step barely moves the table, keeping serving-side quantized bytes
+    stable across refreshes.
     """
     fcw = feature_codewords(state, f_feat, cfg)
     gcw = gradient_codewords(state, f_feat, cfg)
-    return (quantization.quantize_codewords(fcw, prev=prev_feat),
-            quantization.quantize_codewords(gcw, prev=prev_grad))
+    return (quantization.quantize_codewords(fcw, prev=prev_feat, dtype=dtype),
+            quantization.quantize_codewords(gcw, prev=prev_grad, dtype=dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core import codebook as cbm
 from repro.core.codebook import CodebookState, CodebookConfig
 from repro.core.message_passing import ConvOperands
-from repro.distributed.quantization import QTensor
+from repro.distributed.quantization import PackedAssignment, QTensor
 from repro.kernels import ops as kops
 from repro.kernels.spmm_ell_hbm import StripeIndex
 
@@ -68,15 +68,17 @@ class QuantizedCodewords(NamedTuple):
 class LayerVQState(NamedTuple):
     """Per-layer streaming VQ state: codebook + global assignment table.
 
-    ``assignment`` is int32, or uint8 under the int8 operand precision
-    (k <= 256) -- the kernels accept either storage dtype.  ``qcw``, when
-    present, is the int8 snapshot of the codeword tables the layers feed
-    the context kernels instead of dense f32 slices; it is refreshed by
-    the codebook update (quantize-on-update) and preserved untouched by
-    assignment scatters.
+    ``assignment`` is int32, uint8 under the int8/fp8 operand tiers
+    (k <= 256), or a nibble-packed ``PackedAssignment`` under the +a4
+    tiers (k <= 16) -- the kernels accept every storage form.  ``qcw``,
+    when present, is the int8 or fp8 snapshot of the codeword tables the
+    layers feed the context kernels instead of dense f32 slices; it is
+    refreshed by the codebook update (quantize-on-update, in the snapshot's
+    own storage dtype) and preserved untouched by assignment scatters.
     """
     codebook: CodebookState
-    assignment: jax.Array  # [n_branches, n] int32|uint8 codeword id per node
+    # [n_branches, n] codeword id per node: int32 | uint8 | PackedAssignment
+    assignment: jax.Array | PackedAssignment
     counts: jax.Array      # [n_branches, k] f32    histogram of `assignment`
     qcw: Optional[QuantizedCodewords] = None
 
@@ -107,35 +109,58 @@ def refresh_assignment(state: LayerVQState, batch_ids: jax.Array,
     """Scatter the refreshed batch assignments into the global table
     (Alg. 1 line 16, 'synchronize the codeword assignment matrix')."""
     k = state.counts.shape[-1]
-    old = state.assignment[:, batch_ids]                        # [nb, b]
+    packed = isinstance(state.assignment, PackedAssignment)
+    old = state.assignment.gather(batch_ids) if packed \
+        else state.assignment[:, batch_ids]                     # [nb, b]
     # -1 on the evicted ids, +1 on the refreshed ones, in one segment-sum
     delta = branch_histogram(
-        jnp.concatenate([old, new_assign], axis=1), k,
-        jnp.concatenate([jnp.full_like(old, -1, dtype=jnp.float32),
+        jnp.concatenate([old, new_assign.astype(old.dtype)], axis=1), k,
+        jnp.concatenate([jnp.full(old.shape, -1.0, jnp.float32),
                          jnp.ones(new_assign.shape, jnp.float32)], axis=1))
-    assignment = state.assignment.at[:, batch_ids].set(
-        new_assign.astype(state.assignment.dtype))
+    if packed:
+        # parity-pass nibble scatter; batch_ids are distinct per batch (the
+        # EpochPlan pack contract), which scatter_nibbles requires
+        assignment = state.assignment.scatter(batch_ids, new_assign)
+    else:
+        assignment = state.assignment.at[:, batch_ids].set(
+            new_assign.astype(state.assignment.dtype))
     return LayerVQState(state.codebook, assignment, state.counts + delta,
                         state.qcw)
 
 
 def assignment_dtype(cfg: CodebookConfig):
-    """Storage dtype of the global assignment table under the active
-    kernel precision: uint8 when int8 is on and k fits a byte (the 4x
-    VMEM-envelope win on the fused context kernel's resident table)."""
-    int8 = kops.kernel_precision() == "int8" and cfg.k <= 256
-    return jnp.uint8 if int8 else jnp.int32
+    """Element dtype of the global assignment table under the active
+    kernel precision tier: uint8 when a quantized tier is on and k fits a
+    byte (the 4x VMEM-envelope win on the fused context kernel's resident
+    table), else int32.  The +a4 tiers additionally nibble-pack the uint8
+    values two-per-byte -- see ``assignment_packed``."""
+    quantized = kops.precision_codeword_dtype() is not None and cfg.k <= 256
+    return jnp.uint8 if quantized else jnp.int32
+
+
+def assignment_packed(cfg: CodebookConfig) -> bool:
+    """True when the active tier nibble-packs the assignment table
+    (a '+a4' tier and k <= 16; larger k silently stays unpacked, matching
+    the uint8 fallback to int32 for k > 256)."""
+    return kops.precision_packs_assignment() and cfg.k <= 16
 
 
 def quantize_layer_state(state: LayerVQState, f_feat: int,
-                         cfg: CodebookConfig) -> LayerVQState:
-    """(Re)build the int8 codeword snapshot from the current codebook,
-    reusing the previous snapshot's scales inside the drift band."""
+                         cfg: CodebookConfig,
+                         dtype=jnp.int8) -> LayerVQState:
+    """(Re)build the quantized codeword snapshot from the current codebook,
+    reusing the previous snapshot's scales inside the drift band.
+
+    ``dtype`` (int8 or float8_e4m3fn) only matters on the first build;
+    with an existing snapshot the requantization keeps its storage dtype
+    (data-driven -- this runs inside jitted update steps, which must not
+    read the precision knob)."""
     prev = state.qcw
     qf, qg = cbm.quantized_codewords(
         state.codebook, f_feat, cfg,
         prev_feat=None if prev is None else prev.feat,
-        prev_grad=None if prev is None else prev.grad)
+        prev_grad=None if prev is None else prev.grad,
+        dtype=dtype)
     return state._replace(qcw=QuantizedCodewords(qf, qg))
 
 
@@ -162,9 +187,12 @@ def init_layer_vq_state(key: jax.Array, n_nodes: int, f_feat: int,
     assignment = jax.random.randint(
         k_assign, (cb.n_branches, n_nodes), 0, cfg.k).astype(dtype)
     counts = branch_histogram(assignment, cfg.k)
+    if assignment_packed(cfg):
+        assignment = PackedAssignment.pack(assignment)
     state = LayerVQState(cb, assignment, counts)
-    if dtype == jnp.uint8:
-        state = quantize_layer_state(state, f_feat, cfg)
+    cw_dtype = kops.precision_codeword_dtype()
+    if cw_dtype is not None:
+        state = quantize_layer_state(state, f_feat, cfg, dtype=cw_dtype)
     return state
 
 
@@ -241,6 +269,8 @@ def out_of_batch_cluster_mass(state: LayerVQState,
     O(n), the paper's key win for global-context GNNs.
     """
     k = state.counts.shape[-1]
-    batch_assign = state.assignment[:, batch_ids]         # [nb, b]
+    batch_assign = state.assignment.gather(batch_ids) \
+        if isinstance(state.assignment, PackedAssignment) \
+        else state.assignment[:, batch_ids]               # [nb, b]
     batch_counts = branch_histogram(batch_assign, k)
     return jnp.maximum(state.counts - batch_counts, 0.0)

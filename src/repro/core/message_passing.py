@@ -37,6 +37,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.quantization import PackedAssignment
 from repro.kernels import ops as kops
 from repro.kernels.spmm_ell_hbm import StripeIndex
 
@@ -166,11 +167,14 @@ def reconstruct(codewords: jax.Array, assignment: jax.Array,
 
     codewords:  [n_branches, k, f_blk]  (feature *or* gradient codewords)
     assignment: [n_branches, n]         per-branch codeword ids of all nodes
+                (int32/uint8 array or nibble-packed ``PackedAssignment``)
     node_ids:   [...] int               global node ids to reconstruct
     returns     [..., n_branches * f_blk]
     """
     n_branches = codewords.shape[0]
-    ids = assignment[:, node_ids]                       # [nb, ...]
+    ids = assignment.gather(node_ids) \
+        if isinstance(assignment, PackedAssignment) \
+        else assignment[:, node_ids]                    # [nb, ...]
     gathered = jax.vmap(lambda cw, a: cw[a])(codewords, ids)  # [nb, ..., f_blk]
     out = jnp.moveaxis(gathered, 0, -2)                 # [..., nb, f_blk]
     return out.reshape(*out.shape[:-2], n_branches * codewords.shape[-1])

@@ -101,7 +101,9 @@ def gather_from_shards(table: jax.Array, ids: jax.Array, axis_name: str,
     (masked-zero elsewhere), a psum superposes the answers (each row has
     exactly one owner, so the sum is exact), and each shard slices its
     own request window back out.  Integer payloads are summed in int32
-    and cast back -- bit-exact.  ``compress=True`` moves float payloads
+    and cast back -- bit-exact; fp8 payloads (the fp8 codeword tier) move
+    as bitcast uint8 bytes the same way, also bit-exact.  ``compress=True``
+    moves float payloads
     as int8 -- the bandwidth knob for large feature gathers over slow
     links.  Unlike :func:`compressed_psum` (per-shard scales + error
     feedback, right for gradients averaged over many steps), the gather
@@ -120,7 +122,16 @@ def gather_from_shards(table: jax.Array, ids: jax.Array, axis_name: str,
     own = (loc >= 0) & (loc < n_local)
     rows = table[jnp.clip(loc, 0, n_local - 1)]
     mask = own.reshape((-1,) + (1,) * (rows.ndim - 1))
-    if jnp.issubdtype(table.dtype, jnp.integer) or table.dtype == jnp.bool_:
+    if table.dtype in (jnp.dtype(jnp.float8_e4m3fn), jnp.dtype(jnp.float8_e5m2)):
+        # fp8 codeword payloads move as raw bytes: bitcast to uint8, sum in
+        # int32 (one owner per row and fp8 zero is 0x00, so the superposition
+        # is the owner's bit pattern), and bitcast back -- bit-exact, same
+        # wire bytes as the int8 tier.
+        bits = jnp.where(mask, jax.lax.bitcast_convert_type(
+            rows, jnp.uint8).astype(jnp.int32), 0)
+        full = jax.lax.bitcast_convert_type(
+            jax.lax.psum(bits, axis_name).astype(jnp.uint8), table.dtype)
+    elif jnp.issubdtype(table.dtype, jnp.integer) or table.dtype == jnp.bool_:
         contrib = jnp.where(mask, rows.astype(jnp.int32), 0)
         full = jax.lax.psum(contrib, axis_name).astype(table.dtype)
     elif compress:

@@ -124,18 +124,24 @@ def _interpret() -> bool:
 # per-kernel tuners (ops.py consumers)
 # ---------------------------------------------------------------------------
 
-def tuned_spmm(n_src: int, f: int, itemsize: int = 4
+def tuned_spmm(n_src: int, f: int, itemsize: int = 4, dtype=None
                ) -> Optional[dict[str, Any]]:
     """{'variant': 'resident'|'hbm', 'bb': int, 'stripe': int} for a
     [n_src, f] source matrix of ``itemsize``-byte elements, or None when
     autotuning is off.  ``stripe`` (the HBM variant's DMA granule) is
     measured alongside bb under the same cache entry; the resident
     variant ignores it, and a caller's precomputed ``StripeIndex`` still
-    pins both (tuner config never overrides an explicit tiling)."""
+    pins both (tuner config never overrides an explicit tiling).
+
+    ``dtype`` is the storage dtype of the source rows and keys the cache
+    entry -- int8 and float8_e4m3fn share itemsize 1 but are distinct
+    operand regimes, so they must not share a winner (ISSUE 9).  When
+    omitted it falls back to the itemsize-derived legacy key."""
     if not enabled():
         return None
-    key = cache_key("spmm", (n_src, f, itemsize),
-                    jnp.int8 if itemsize == 1 else jnp.float32)
+    if dtype is None:
+        dtype = jnp.int8 if itemsize == 1 else jnp.float32
+    key = cache_key("spmm", (n_src, f, itemsize), dtype)
     hit = lookup(key)
     if hit is not None:
         return hit
@@ -167,28 +173,45 @@ def tuned_spmm(n_src: int, f: int, itemsize: int = 4
     return cfg
 
 
-def tuned_context(n_nodes: int, n_branches: int, itemsize: int = 4
-                  ) -> Optional[dict[str, Any]]:
+def tuned_context(n_nodes: int, n_branches: int, itemsize: float = 4,
+                  dtype=None) -> Optional[dict[str, Any]]:
     """{'variant': 'fused'|'loop', 'bb': int} for an
-    [n_branches, n_nodes] assignment table, or None when autotuning is off."""
+    [n_branches, n_nodes] assignment table, or None when autotuning is off.
+
+    ``dtype`` keys the cache entry by the table's storage dtype; pass
+    ``jnp.uint4`` for nibble-packed tables (``PackedAssignment``, itemsize
+    0.5) -- the measurement then races the packed fused kernel against the
+    loop fallback on the unpacked uint8 table, matching what dispatch
+    would actually run in each regime."""
     if not enabled():
         return None
-    dtype = jnp.uint8 if itemsize == 1 else jnp.int32
+    if dtype is None:
+        dtype = (jnp.uint4 if itemsize == 0.5
+                 else jnp.uint8 if itemsize == 1 else jnp.int32)
+    dtype = jnp.dtype(dtype)
+    packed = dtype == jnp.dtype(jnp.uint4)
     key = cache_key("context", (n_nodes, n_branches), dtype)
     hit = lookup(key)
     if hit is not None:
         return hit
 
+    from repro.distributed.quantization import PackedAssignment
     from repro.kernels.context_ell import context_ell_pallas
     from repro.kernels.spmm_ell import spmm_ell_pallas
-    b, deg, k, f_blk = min(_ROW_CLAMP, 256), 16, 64, 8
+    b, deg, f_blk = min(_ROW_CLAMP, 256), 16, 8
+    k = 16 if packed else 64
     n = min(int(n_nodes), _SRC_CLAMP)
     nb = int(n_branches)
     rng = jax.random.PRNGKey(0)
     ki, kv, ka, kc = jax.random.split(rng, 4)
     ids = jax.random.randint(ki, (b, deg), 0, n, jnp.int32)
     val = jax.random.uniform(kv, (b, deg), jnp.float32)
-    assign = jax.random.randint(ka, (nb, n), 0, k, jnp.int32).astype(dtype)
+    assign = jax.random.randint(ka, (nb, n), 0, k, jnp.int32)
+    if packed:
+        fused_a: Any = PackedAssignment.pack(assign)
+        loop_a = assign.astype(jnp.uint8)
+    else:
+        fused_a = loop_a = assign.astype(dtype)
     cw = jax.random.normal(kc, (nb, k, f_blk), jnp.float32)
     interp = _interpret()
 
@@ -203,8 +226,8 @@ def tuned_context(n_nodes: int, n_branches: int, itemsize: int = 4
     for bb in (64, 128, 256):
         timings[("fused", bb)] = _time(
             lambda i, v, a, c, _bb=bb: context_ell_pallas(
-                i, v, a, c, bb=_bb, interpret=interp), ids, val, assign, cw)
-    timings[("loop", 128)] = _time(loop, ids, val, assign, cw)
+                i, v, a, c, bb=_bb, interpret=interp), ids, val, fused_a, cw)
+    timings[("loop", 128)] = _time(loop, ids, val, loop_a, cw)
     (variant, bb), _ = min(timings.items(), key=lambda kv_: kv_[1])
     cfg = {"variant": variant, "bb": int(bb)}
     record(key, cfg)

@@ -30,15 +30,22 @@ computes ``sum_d rev_vals[:, d] * G~[c(rev_ids[:, d])]``, and the optional
 row tile), so ``inject_context_grad`` needs no ``[b, Dr, f_grad]``
 residual -- the codebook itself is the residual.
 
-Low-precision operands (DESIGN.md section 13): the codeword tables may be
-int8 with a per-branch/per-channel f32 scale (``cw_scale [nb, 1, f_blk]``,
+Low-precision operands (DESIGN.md sections 13/15): the codeword tables may
+be int8 or float8_e4m3fn with a per-branch/per-channel f32 scale
+(``cw_scale [nb, 1, f_blk]``,
 ``distributed.quantization.quantize_codewords``) and the assignment table
-may be uint8 (k <= 256) -- both stay in their storage dtype inside VMEM
-(4x envelope win on the assignment table, the dispatch-budget lever), the
+may be uint8 (k <= 256) or nibble-packed (``PackedAssignment``, k <= 16,
+two ids per byte) -- all stay in their storage dtype inside VMEM (4x /
+8x-vs-int32 envelope win on the assignment table, the dispatch-budget
+lever).  Quantized codeword rows gather in storage dtype and widen
+in-register (``astype(f32)``) -- on non-fp8 backends that upcast IS the
+fallback path, so interpret-mode CPU CI exercises the same kernel.  The
 accumulate runs in f32, and the dequant multiply is a single epilogue row
 ``acc * scale_flat [1, nb * f_blk]``: scales are k-independent, so the
 multiply commutes with the over-neighbors sum and with the fused ``w_t``
-MXU epilogue ordering (scale first, then ``@ W^T``).
+MXU epilogue ordering (scale first, then ``@ W^T``).  Packed assignments
+unpack in-kernel with a shift/mask on the gathered byte -- no unpacked
+table ever materializes.
 
 Padding contract (shared with spmm_ell): slots with ``vals == 0`` may
 point at any valid node id; rows padded to the ``bb`` tile carry zero vals.
@@ -52,9 +59,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.distributed.quantization import PackedAssignment
+
 
 def _accumulate(ids_ref, val_ref, assign_ref, cw_ref, *, deg: int, nb: int,
-                k: int, bb: int) -> jax.Array:
+                k: int, bb: int, packed: bool = False) -> jax.Array:
     """Shared fused gather+FMA over the D neighbor slots -> [bb, nb*f_blk]."""
     f_blk = cw_ref.shape[1]
     offs = jax.lax.broadcasted_iota(jnp.int32, (1, nb), 1) * k  # [1, nb]
@@ -62,9 +71,15 @@ def _accumulate(ids_ref, val_ref, assign_ref, cw_ref, *, deg: int, nb: int,
     def body(d, acc):
         ids = ids_ref[:, d]                                # [bb] int32
         vals = val_ref[:, d].astype(jnp.float32)           # [bb]
-        # assignment rides in its storage dtype (int32 or uint8); the id
-        # arithmetic widens in-register only
-        aid = assign_ref[ids, :].astype(jnp.int32) + offs  # [bb, nb] flat rows
+        if packed:
+            # nibble-packed table [ceil(n/2), nb]: gather the byte holding
+            # the id, then shift/mask out this node's nibble in-register
+            byte = assign_ref[ids >> 1, :].astype(jnp.int32)   # [bb, nb]
+            aid = ((byte >> ((ids & 1) * 4)[:, None]) & 0xF) + offs
+        else:
+            # assignment rides in its storage dtype (int32 or uint8); the
+            # id arithmetic widens in-register only
+            aid = assign_ref[ids, :].astype(jnp.int32) + offs  # [bb, nb]
         rows = cw_ref[aid.reshape(bb * nb), :]             # [bb*nb, f_blk]
         # row-major flatten: row (i*nb + beta) is branch beta of batch row i,
         # so this reshape IS the branch concat -- no moveaxis, no copy
@@ -76,17 +91,19 @@ def _accumulate(ids_ref, val_ref, assign_ref, cw_ref, *, deg: int, nb: int,
 
 
 def _context_ell_kernel(ids_ref, val_ref, assign_ref, cw_ref, o_ref, *,
-                        deg: int, nb: int, k: int):
+                        deg: int, nb: int, k: int, packed: bool):
     bb = o_ref.shape[0]
-    o_ref[...] = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
-                             deg=deg, nb=nb, k=k, bb=bb).astype(o_ref.dtype)
+    o_ref[...] = _accumulate(ids_ref, val_ref, assign_ref, cw_ref, deg=deg,
+                             nb=nb, k=k, bb=bb,
+                             packed=packed).astype(o_ref.dtype)
 
 
 def _context_ell_wt_kernel(ids_ref, val_ref, assign_ref, cw_ref, wt_ref,
-                           o_ref, *, deg: int, nb: int, k: int):
+                           o_ref, *, deg: int, nb: int, k: int,
+                           packed: bool):
     bb = o_ref.shape[0]
     acc = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
-                      deg=deg, nb=nb, k=k, bb=bb)
+                      deg=deg, nb=nb, k=k, bb=bb, packed=packed)
     # fused epilogue: the Eq. 7 ``@ W^T`` as one resident MXU matmul
     o_ref[...] = jax.lax.dot_general(
         acc, wt_ref[...].astype(jnp.float32),
@@ -95,19 +112,21 @@ def _context_ell_wt_kernel(ids_ref, val_ref, assign_ref, cw_ref, wt_ref,
 
 
 def _context_ell_q_kernel(ids_ref, val_ref, assign_ref, cw_ref, sc_ref,
-                          o_ref, *, deg: int, nb: int, k: int):
-    """int8 codewords: f32 accumulate + one dequant-row epilogue."""
+                          o_ref, *, deg: int, nb: int, k: int,
+                          packed: bool):
+    """int8/fp8 codewords: f32 accumulate + one dequant-row epilogue."""
     bb = o_ref.shape[0]
     acc = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
-                      deg=deg, nb=nb, k=k, bb=bb)
+                      deg=deg, nb=nb, k=k, bb=bb, packed=packed)
     o_ref[...] = (acc * sc_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
 def _context_ell_q_wt_kernel(ids_ref, val_ref, assign_ref, cw_ref, sc_ref,
-                             wt_ref, o_ref, *, deg: int, nb: int, k: int):
+                             wt_ref, o_ref, *, deg: int, nb: int, k: int,
+                             packed: bool):
     bb = o_ref.shape[0]
     acc = _accumulate(ids_ref, val_ref, assign_ref, cw_ref,
-                      deg=deg, nb=nb, k=k, bb=bb)
+                      deg=deg, nb=nb, k=k, bb=bb, packed=packed)
     acc = acc * sc_ref[...].astype(jnp.float32)   # dequant BEFORE the W^T mix
     o_ref[...] = jax.lax.dot_general(
         acc, wt_ref[...].astype(jnp.float32),
@@ -125,12 +144,13 @@ def context_ell_pallas(out_ids: jax.Array, out_vals: jax.Array,
 
     out_ids:    [b, D] int32  global node ids (padding: val == 0)
     out_vals:   [b, D]        edge values
-    assignment: [n_branches, n] int32 or uint8 (k <= 256) codeword ids;
-                the table stays in its storage dtype inside VMEM
+    assignment: [n_branches, n] int32 or uint8 (k <= 256) codeword ids, or
+                a nibble-packed ``PackedAssignment`` (k <= 16); the table
+                stays in its storage dtype inside VMEM
     codewords:  [n_branches, k, f_blk]  feature OR gradient codewords
-                (f32, or int8 when ``cw_scale`` is given)
+                (f32, or int8/fp8 when ``cw_scale`` is given)
     cw_scale:   optional [n_branches, 1, f_blk] f32 per-branch/per-channel
-                dequant scales of int8 codewords (module docstring)
+                dequant scales of quantized codewords (module docstring)
     w_t:        optional [n_branches * f_blk, f_out] fused epilogue matmul
 
     Returns [b, n_branches * f_blk] (branch-concatenated), or [b, f_out]
@@ -149,14 +169,20 @@ def context_ell_pallas(out_ids: jax.Array, out_vals: jax.Array,
         out_ids.astype(jnp.int32))
     val_p = jnp.zeros((bp, deg), jnp.float32).at[:b].set(
         out_vals.astype(jnp.float32))
-    # uint8 assignment stays uint8 (the 4x VMEM-envelope win); everything
-    # else rides as int32
-    assign_t = assignment.T if assignment.dtype == jnp.uint8 \
-        else assignment.astype(jnp.int32).T            # [n, nb]
+    packed = isinstance(assignment, PackedAssignment)
+    if packed:
+        # packed bytes transpose to [ceil(n/2), nb]: one gathered byte row
+        # holds a node pair's ids for every branch
+        assign_t = assignment.packed.T
+    else:
+        # uint8 assignment stays uint8 (the 4x VMEM-envelope win);
+        # everything else rides as int32
+        assign_t = assignment.T if assignment.dtype == jnp.uint8 \
+            else assignment.astype(jnp.int32).T        # [n, nb]
     cw_flat = codewords.reshape(nb * k, f_blk)
 
     n = assign_t.shape[0]
-    common = dict(deg=deg, nb=nb, k=k)
+    common = dict(deg=deg, nb=nb, k=k, packed=packed)
     in_specs = [
         pl.BlockSpec((bb, deg), lambda i: (i, 0)),
         pl.BlockSpec((bb, deg), lambda i: (i, 0)),

@@ -2,7 +2,9 @@
 
 On a TPU backend the Pallas kernels run compiled; on the CPU host the system
 executes the pure-jnp oracles from ref.py (numerically identical -- the
-kernels are validated against them in interpret mode by tests/test_kernels_*).
+kernels are validated against them in interpret mode by tests/test_kernels.py,
+tests/test_context_ell.py, tests/test_spmm_hbm.py, tests/test_vq_update.py
+and the precision sweeps in tests/test_int8.py / tests/test_fp8_int4.py).
 Set REPRO_FORCE_PALLAS=1 to route every call through the interpret-mode
 kernels instead (used by the kernel test sweeps and CI).
 
@@ -21,6 +23,11 @@ Production notes (TPU):
     to the per-branch loop when the [n_branches, n] assignment table
     exceeds the VMEM envelope (REPRO_CONTEXT_VARIANT /
     REPRO_CONTEXT_VMEM_BUDGET_MB or ``configure_context_dispatch``).
+  * operand precision tiers (DESIGN.md sections 13/15): codewords may be
+    int8 or float8_e4m3fn ``QTensor`` snapshots and assignment tables
+    uint8 (k <= 256) or nibble-packed ``PackedAssignment`` (k <= 16);
+    every wrapper dispatches on the operand's type/dtype, never on the
+    environment, so the tier choice happens once at state construction.
   * ``flash_attention``: 32k+ sequences use a (bh, nq, nk) grid with carried
     scratch instead of the resident-KV loop (the HBM SpMM kernel's
     double-buffering idiom is the template; still TODO).
@@ -41,7 +48,7 @@ from repro.kernels.spmm_ell import spmm_ell_pallas
 from repro.kernels.spmm_ell_hbm import StripeIndex, spmm_ell_hbm_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.vq_attention import vq_attention_decode_pallas
-from repro.distributed.quantization import QTensor
+from repro.distributed.quantization import PackedAssignment, QTensor
 
 
 def _use_pallas() -> bool:
@@ -51,39 +58,68 @@ def _use_pallas() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# kernel operand precision (fp32 vs int8 storage)
+# kernel operand precision tiers (fp32 / int8 / fp8 / +a4 packing)
 # ---------------------------------------------------------------------------
 
 # The kernels themselves dispatch on OPERAND TYPE (QTensor codewords, uint8
-# assignment tables) so jitted callers never read the environment inside a
-# trace; this knob only steers the host-side state-construction sites
-# (core/conv.py init, models/gnn.py serving, launch/serve_gnn.py) that decide
-# which storage dtype to build.  DESIGN.md section 13.
-_PRECISIONS = ("fp32", "int8")
+# or PackedAssignment tables) so jitted callers never read the environment
+# inside a trace; this knob only steers the host-side state-construction
+# sites (core/conv.py init, models/gnn.py serving, launch/serve_gnn.py) that
+# decide which storage dtype to build.  The tier ladder (DESIGN.md section
+# 15): 'fp32' (dense), 'int8' (int8 codewords + uint8 assignments, k <= 256),
+# 'fp8' (float8_e4m3fn codewords, same uint8 assignments), and the '+a4'
+# suffix tiers that additionally nibble-pack the assignment table for
+# k <= 16 product branches (two ids per byte, 8x vs int32).
+PRECISIONS = ("fp32", "int8", "fp8", "int8+a4", "fp8+a4")
+_PRECISIONS = PRECISIONS  # backwards-compat alias
 _precision_override: list[str] = []
+
+
+def _check_precision(p: str, source: str) -> str:
+    if p not in PRECISIONS:
+        raise ValueError(
+            f"{source}={p!r}: unknown kernel precision tier; valid tiers "
+            f"are {', '.join(PRECISIONS)}")
+    return p
 
 
 def configure_kernel_precision(precision: Optional[str] = None, *,
                                reset: bool = False) -> None:
-    """Programmatic override of REPRO_KERNEL_PRECISION ('fp32' | 'int8')."""
+    """Programmatic override of REPRO_KERNEL_PRECISION.
+
+    Valid tiers are ``PRECISIONS``; anything else raises (listing them) so
+    an unrecognized string can never silently behave like fp32.
+    """
     if reset:
         _precision_override.clear()
     if precision is not None:
-        if precision not in _PRECISIONS:
-            raise ValueError(
-                f"unknown kernel precision: {precision!r}; want fp32 or int8")
+        _check_precision(precision, "kernel precision")
         _precision_override[:] = [precision]
 
 
 def kernel_precision() -> str:
-    """Active operand-storage precision ('fp32' default)."""
+    """Active operand-storage precision tier ('fp32' default)."""
     if _precision_override:
         return _precision_override[0]
-    p = os.environ.get("REPRO_KERNEL_PRECISION", "fp32")
-    if p not in _PRECISIONS:
-        raise ValueError(
-            f"REPRO_KERNEL_PRECISION={p!r}: want fp32 or int8")
-    return p
+    return _check_precision(
+        os.environ.get("REPRO_KERNEL_PRECISION", "fp32"),
+        "REPRO_KERNEL_PRECISION")
+
+
+def precision_codeword_dtype(precision: Optional[str] = None):
+    """Codeword storage dtype of a tier: None (dense f32), int8, or fp8."""
+    p = _check_precision(precision if precision is not None
+                         else kernel_precision(), "kernel precision")
+    if p == "fp32":
+        return None
+    return jnp.float8_e4m3fn if p.startswith("fp8") else jnp.int8
+
+
+def precision_packs_assignment(precision: Optional[str] = None) -> bool:
+    """True for the '+a4' tiers that nibble-pack assignment tables."""
+    p = _check_precision(precision if precision is not None
+                         else kernel_precision(), "kernel precision")
+    return p.endswith("+a4")
 
 
 def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
@@ -102,8 +138,10 @@ def vq_assign_update(x: jax.Array, codewords: jax.Array, *,
     returns (assignment [b], qerr [b], counts [k], sums [k, f]) from a
     single distance computation.  TPU: kernels/vq_update.py (revisited
     VMEM accumulator blocks, no one-hot); CPU: scatter-add oracle.
-    ``emit_dtype=jnp.uint8`` (k <= 256) emits the assignment in the int8
-    path's storage dtype straight from the kernel.
+    ``emit_dtype=jnp.uint8`` (k <= 256) emits the assignment in the
+    int8/fp8 tiers' storage dtype straight from the kernel;
+    ``emit_dtype=jnp.uint4`` (k <= 16) narrows for the +a4 tiers' nibble
+    packing (the kernel block stays uint8 -- no sub-byte output windows).
     """
     if _use_pallas():
         bb, kb = 256, 512
@@ -210,11 +248,14 @@ def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
     ``repro.graph.batching.make_stripe_index``) is only consumed by the HBM
     variant; the resident kernel and the CPU oracle ignore it.
 
-    ``x`` may be a ``QTensor`` of int8 rows (or pass ``x_scale`` [1, f]
-    explicitly with an int8 ``x``): both kernel variants and the CPU
-    oracle consume the storage dtype natively -- f32 accumulate and one
-    dequant epilogue inside the kernel, so the HBM variant's stripes DMA
-    as int8 bytes too (DESIGN.md section 13).
+    ``x`` may be a ``QTensor`` of int8 or float8_e4m3fn rows (or pass
+    ``x_scale`` [1, f] explicitly with a quantized ``x``): both kernel
+    variants and the CPU oracle consume the storage dtype natively -- f32
+    accumulate and one dequant epilogue inside the kernel, so the HBM
+    variant's stripes DMA as 1-byte elements too (DESIGN.md sections
+    13/15).  On backends without native fp8 arithmetic the in-kernel
+    ``astype(f32)`` upcast is the fallback path -- same kernel, interpret
+    mode included.
 
     A precomputed ``stripe_index`` pins the HBM tiling (its static
     bb/stripe override the tuner's); otherwise the autotuner's measured
@@ -226,7 +267,10 @@ def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
         interpret = jax.default_backend() != "tpu"
         n_src, f = x.shape
         bb, stripe = 128, 512
-        tuned = autotune.tuned_spmm(n_src, f, x.dtype.itemsize)
+        # key the tuner on the storage dtype, not just itemsize: int8 and
+        # fp8 sources share itemsize 1 but are distinct operand regimes
+        tuned = autotune.tuned_spmm(n_src, f, x.dtype.itemsize,
+                                    dtype=x.dtype)
         if tuned is not None:
             bb = int(tuned.get("bb", bb))
             stripe = int(tuned.get("stripe", stripe))
@@ -269,12 +313,16 @@ def configure_context_dispatch(variant: Optional[str] = None,
 
 
 def context_ell_variant(n_nodes: int, n_branches: int,
-                        itemsize: int = 4) -> str:
+                        itemsize: float = 4, dtype=None) -> str:
     """'fused' or 'loop' for an [n_branches, n_nodes] assignment table.
 
     The fused kernel keeps the whole assignment table VMEM-resident; past
     the VMEM envelope the per-branch loop (whose gathers run outside the
-    kernel against the tiny [k, f_blk] tables) takes over.
+    kernel against the tiny [k, f_blk] tables) takes over.  ``itemsize``
+    is bytes per assignment entry and may be fractional: nibble-packed
+    tables (``PackedAssignment``) occupy 0.5 bytes/entry, which is exactly
+    how the +a4 tiers double the fused-dispatch crossover again.  ``dtype``
+    keys the autotuner entry (defaults to an itemsize-derived dtype).
     """
     forced = _context_overrides.get(
         "variant", os.environ.get("REPRO_CONTEXT_VARIANT", "auto"))
@@ -284,7 +332,7 @@ def context_ell_variant(n_nodes: int, n_branches: int,
     if forced in ("fused", "loop"):
         return str(forced)
     if not _budget_forced(_context_overrides, "REPRO_CONTEXT_VMEM_BUDGET_MB"):
-        tuned = autotune.tuned_context(n_nodes, n_branches, itemsize)
+        tuned = autotune.tuned_context(n_nodes, n_branches, itemsize, dtype)
         if tuned is not None:
             return str(tuned["variant"])
     budget_mb = _vmem_budget_mb(_context_overrides,
@@ -300,10 +348,15 @@ def _context_ell_loop(out_ids, out_vals, assignment, codewords, w_t,
     Used when the [n_branches, n] assignment table exceeds the fused
     kernel's VMEM envelope -- each branch's gather source is its tiny
     [k, f_blk] codeword table, so the per-branch SpMM always dispatches
-    to the resident variant regardless of graph size.  int8 codewords ride
-    into each branch's SpMM with their [1, f_blk] scale row (per-branch
-    dequant before the concat == the fused kernel's flat epilogue).
+    to the resident variant regardless of graph size.  int8/fp8 codewords
+    ride into each branch's SpMM with their [1, f_blk] scale row
+    (per-branch dequant before the concat == the fused kernel's flat
+    epilogue).  Nibble-packed tables unpack here (outside the kernels):
+    in the loop regime the table is HBM-resident anyway, so packing only
+    buys storage, not the dispatch crossover.
     """
+    if isinstance(assignment, PackedAssignment):
+        assignment = assignment.unpack()
     branch_ids = assignment.astype(jnp.int32)[:, out_ids]  # [nb, b, D]
     per_branch = [
         spmm_ell(branch_ids[i], out_vals, codewords[i],
@@ -331,22 +384,32 @@ def context_ell(out_ids: jax.Array, out_vals: jax.Array,
     codewords (+ optional fused ``w_t`` epilogue), the streaming Eq. 7
     backward of ``inject_context_grad`` (DESIGN.md section 10).
 
-    The int8 path is data-driven (no env read under jit): pass ``codewords``
-    as a ``QTensor`` ([nb, k, f_blk] int8 + [nb, 1, f_blk] f32 scales) and
-    optionally a uint8 ``assignment`` (k <= 256) -- the operands stay in
-    storage dtype through every variant, with one f32 dequant epilogue.
+    The quantized tiers are data-driven (no env read under jit): pass
+    ``codewords`` as a ``QTensor`` ([nb, k, f_blk] int8 or float8_e4m3fn +
+    [nb, 1, f_blk] f32 scales) and an ``assignment`` that is uint8
+    (k <= 256) or a nibble-packed ``PackedAssignment`` (k <= 16) -- the
+    operands stay in storage dtype through every variant, with one f32
+    dequant epilogue; packed tables count 0.5 bytes/entry against the
+    dispatch VMEM budget (the crossover-doubling lever).
     """
     cw_scale = None
     if isinstance(codewords, QTensor):
         codewords, cw_scale = codewords.q, codewords.scale
     if _use_pallas():
         interpret = jax.default_backend() != "tpu"
-        nb, n = assignment.shape
+        if isinstance(assignment, PackedAssignment):
+            nb, n = assignment.shape
+            itemsize: float = 0.5
+            a_dtype = jnp.uint4
+        else:
+            nb, n = assignment.shape
+            itemsize = assignment.dtype.itemsize
+            a_dtype = assignment.dtype
         bb = 128
-        tuned = autotune.tuned_context(n, nb, assignment.dtype.itemsize)
+        tuned = autotune.tuned_context(n, nb, itemsize, dtype=a_dtype)
         if tuned is not None:
             bb = int(tuned.get("bb", bb))
-        if context_ell_variant(n, nb, assignment.dtype.itemsize) == "fused":
+        if context_ell_variant(n, nb, itemsize, dtype=a_dtype) == "fused":
             return context_ell_pallas(out_ids, out_vals, assignment,
                                       codewords, cw_scale=cw_scale, w_t=w_t,
                                       bb=bb, interpret=interpret)

@@ -10,6 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.quantization import PackedAssignment
+
 
 def vq_assign(x: jax.Array, codewords: jax.Array) -> jax.Array:
     """Nearest codeword by squared L2.  x: [b, f], codewords: [k, f] -> [b]."""
@@ -49,7 +51,8 @@ def spmm_ell(nbr_idx: jax.Array, nbr_val: jax.Array, x: jax.Array,
 
     nbr_idx: [b, D] int32 (padding entries may point anywhere, their val is 0)
     nbr_val: [b, D] float
-    x:       [n_src, f] (int8 rows when ``x_scale`` is given)
+    x:       [n_src, f] (int8 or float8_e4m3fn rows when ``x_scale`` is
+             given; the gather stays in storage dtype, the einsum upcasts)
     x_scale: optional [1, f] f32 per-channel dequant scales; applied as one
              epilogue multiply after the accumulate (row-independent scales
              commute with the over-neighbors sum -- the kernels' contract)
@@ -70,8 +73,10 @@ def context_ell(out_ids: jax.Array, out_vals: jax.Array,
     """Multi-branch VQ-context SpMM oracle (kernels/context_ell.py).
 
     out_ids/out_vals: [b, D] (padding entries carry val == 0)
-    assignment: [n_branches, n] int32 (or uint8 storage, k <= 256)
-    codewords: [n_branches, k, f_blk] (int8 when ``cw_scale`` is given)
+    assignment: [n_branches, n] int32 (or uint8 storage, k <= 256; or a
+                nibble-packed ``PackedAssignment``, k <= 16 -- the oracle
+                unpacks it up front, the kernel shift/masks in-register)
+    codewords: [n_branches, k, f_blk] (int8/fp8 when ``cw_scale`` is given)
     cw_scale: optional [n_branches, 1, f_blk] f32 per-branch/per-channel
               dequant scales, applied as one epilogue row multiply (the
               scales are k-independent -- same contract as the kernel)
@@ -86,6 +91,8 @@ def context_ell(out_ids: jax.Array, out_vals: jax.Array,
     if out_ids.shape[1] == 0:
         f_out = nb * f_blk if w_t is None else w_t.shape[1]
         return jnp.zeros((b, f_out), jnp.float32)
+    if isinstance(assignment, PackedAssignment):
+        assignment = assignment.unpack()
     branch_ids = assignment.astype(jnp.int32)[:, out_ids]  # [nb, b, D]
     vals = out_vals.astype(jnp.float32)
     # per-branch gather + contraction inside ONE computation (the branch

@@ -43,6 +43,12 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.vq_assign import pad_assign_operands
 
+# Narrow emit dtypes and the largest k each can index: uint8 (the int8/fp8
+# tiers' table dtype) and uint4 (the nibble-packed +a4 tiers; SIGNED int4
+# tops out at 7 and would wrap ids 8..15, so it is deliberately absent).
+# int32 is always valid and carries no limit.
+_EMIT_K_LIMITS = {"uint8": 256, "uint4": 16}
+
 
 def _vq_update_kernel(x_ref, c_ref, idx_ref, qerr_ref, cnt_ref, sum_ref, *,
                       bb: int, kb: int, b: int):
@@ -116,6 +122,10 @@ def vq_assign_update_pallas(
     carry 1e15 distance and never win the argmin, so every emitted index
     is < k.  Multi-k-tile grids carry int32 intermediates in the revisited
     block (tile offsets exceed the narrow range) and narrow in the wrapper.
+    ``emit_dtype=jnp.uint4`` (the +a4 tiers, valid for k <= 16) shares the
+    native uint8 output block -- Mosaic has no sub-byte output windows --
+    and narrows to uint4 in the wrapper; callers nibble-pack from there
+    (``distributed.quantization.pack_nibbles``).
 
     Handles all padding internally via the shared
     :func:`~repro.kernels.vq_assign.pad_assign_operands` (padded codewords
@@ -125,11 +135,23 @@ def vq_assign_update_pallas(
     b, f = x.shape
     k = codewords.shape[0]
     emit = jnp.dtype(emit_dtype)
-    if emit != jnp.int32 and k > 256:
-        raise ValueError(f"emit_dtype={emit} needs k <= 256, got k={k}")
+    k_limit = _EMIT_K_LIMITS.get(emit.name)
+    if emit != jnp.int32 and k_limit is None:
+        raise ValueError(
+            f"emit_dtype={emit.name!r} is not a supported assignment "
+            f"storage dtype; want jnp.int32 or one of "
+            f"{sorted(_EMIT_K_LIMITS)}")
+    if emit != jnp.int32 and k > k_limit:
+        raise ValueError(
+            f"emit_dtype={emit.name!r} supports k <= {k_limit}, got "
+            f"k={k}; use emit_dtype=jnp.int32 (always valid)"
+            + (" or jnp.uint8 (k <= 256)" if emit == jnp.uint4 else ""))
     xp, cp, bb, kb, bp, kp, fp = pad_assign_operands(x, codewords, bb, kb)
-    idx_dtype = emit if (emit == jnp.int32 or
-                         (kp <= kb and kp <= 256)) else jnp.int32
+    # sub-byte dtypes ride the uint8 output block; byte-wide emit dtypes go
+    # out natively when the grid has a single k-tile
+    block_emit = jnp.uint8 if emit == jnp.uint4 else emit
+    idx_dtype = block_emit if (emit == jnp.int32 or
+                               (kp <= kb and kp <= 256)) else jnp.int32
 
     grid = (bp // bb, kp // kb)
     idx, qerr, counts, sums = pl.pallas_call(

@@ -31,36 +31,38 @@ from repro.configs.base import SHAPES
 from repro.configs.registry import ARCHS
 from repro.distributed import sharding as shd
 from repro.distributed.act_constraints import clear_policy, set_policy
+from repro.distributed.quantization import dtype_nbits
 from repro.launch.input_specs import arch_for_cell, input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.train.loop import make_train_step
 from repro.train.optimizer import adam
 
-# cells where exact attention at 500k is intentionally not built
-# (pure full-attention variant would be quadratic); VQ-Attention variants
-# run instead -- see input_specs.arch_for_cell.
-_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
-                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
-                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
-
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
 def _shape_bytes(shape_str: str) -> int:
-    """'bf16[128,4096]{1,0}' -> byte count (handles tuple shapes)."""
-    total = 0
+    """'bf16[128,4096]{1,0}' -> byte count (handles tuple shapes).
+
+    Dtype widths come from the shared
+    :func:`repro.distributed.quantization.dtype_nbits` HLO short-name map
+    (one table for HLO dumps, device arrays, and sub-byte packed operands);
+    unknown short names are skipped, matching its lookup contract.
+    """
+    total_bits = 0
     for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
         dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
+        try:
+            nbits = dtype_nbits(dt)
+        except (KeyError, TypeError):
             continue
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+        total_bits += n * nbits
+    return (total_bits + 7) // 8
 
 
 def collective_bytes(hlo_text: str) -> dict:

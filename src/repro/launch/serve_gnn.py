@@ -252,10 +252,12 @@ def main():
                     "the mesh (capacity mode -- per-device graph bytes "
                     "drop ~1/N, DESIGN.md section 14)")
     ap.add_argument("--precision", default="fp32",
-                    choices=["fp32", "int8"],
-                    help="kernel operand precision: int8 serves uint8 "
-                    "assignment tables + int8 codeword snapshots "
-                    "(DESIGN.md section 13)")
+                    choices=list(kops.PRECISIONS),
+                    help="kernel operand precision tier: int8/fp8 serve "
+                    "uint8 assignment tables + int8/fp8 codeword "
+                    "snapshots; the '+a4' variants nibble-pack the "
+                    "assignment tables (k <= 16, 2 ids/byte) "
+                    "(DESIGN.md sections 13 and 15)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -274,8 +276,8 @@ def main():
     else:
         params = init_gnn(jax.random.PRNGKey(args.seed), cfg)
         vq = init_vq_states(jax.random.PRNGKey(args.seed + 1), cfg, g.n)
-    if args.precision == "int8":
-        vq = quantize_vq_states(vq, cfg)
+    if args.precision != "fp32":
+        vq = quantize_vq_states(vq, cfg, precision=args.precision)
 
     mesh = shd.graph_dp_mesh(args.mesh) if args.mesh else None
     server = GNNServer(g, cfg, params, vq, args.batch, mesh=mesh,

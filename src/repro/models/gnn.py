@@ -22,8 +22,10 @@ from repro.core.conv import LayerVQState, MinibatchPack, init_layer_vq_state, \
     quantize_layer_state, refresh_assignment
 from repro.distributed.collectives import gather_from_shards, psum_tree, \
     shard_scatter_rows
+from repro.distributed.quantization import PackedAssignment
 from repro.graph.batching import EpochPlan, FullGraphOperands, plan_batch, \
     plan_batch_sharded
+from repro.kernels import ops as kops
 from repro.nn.gnn_layers import BACKBONES
 from repro.train.optimizer import Optimizer
 
@@ -102,24 +104,47 @@ def init_vq_states(key: jax.Array, cfg: GNNConfig,
     return states
 
 
-def quantize_vq_states(vq_states: list[LayerVQState],
-                       cfg: GNNConfig) -> list[LayerVQState]:
-    """int8 serving conversion of the per-layer VQ states.
+def quantize_vq_states(vq_states: list[LayerVQState], cfg: GNNConfig,
+                       precision: str | None = None) -> list[LayerVQState]:
+    """Quantized serving conversion of the per-layer VQ states.
 
-    Each layer gets a uint8 assignment table (k <= 256 -- the 4x VMEM win
-    on the fused context kernel's resident table) and an attached QTensor
-    codeword snapshot, so every context dispatch downstream consumes int8
-    operands (DESIGN.md section 13).  Idempotent; the fp32 codebook stays
-    in place for updates and dense (GAT/transformer) reads.
+    ``precision`` is a tier from ``kops.PRECISIONS`` (default: the active
+    ``kernel_precision()``; plain ``quantize_vq_states(vq, cfg)`` under the
+    fp32 default keeps the historical behavior of the int8 tier).  Each
+    layer gets a uint8 assignment table (k <= 256 -- the 4x VMEM win on
+    the fused context kernel's resident table), nibble-packed two-ids-per-
+    byte under the '+a4' tiers (k <= 16, 8x vs int32), and an attached
+    QTensor codeword snapshot in the tier's storage dtype (int8 or
+    float8_e4m3fn), so every context dispatch downstream consumes
+    quantized operands (DESIGN.md sections 13/15).  Idempotent; the fp32
+    codebook stays in place for updates and dense (GAT/transformer) reads.
     """
+    if precision is None:
+        p = kops.kernel_precision()
+        precision = p if p != "fp32" else "int8"
+    cw_dtype = kops.precision_codeword_dtype(precision)
+    if cw_dtype is None:
+        return list(vq_states)
+    pack = kops.precision_packs_assignment(precision)
     cb_cfg = cfg.layer_codebook_cfg()
     if cb_cfg.k > 256:
         raise ValueError(
-            f"int8 assignment tables need k <= 256, got k={cb_cfg.k}")
+            f"quantized assignment tables need k <= 256, got k={cb_cfg.k}")
+    if pack and cb_cfg.k > 16:
+        raise ValueError(
+            f"nibble-packed ('+a4') assignment tables need k <= 16, got "
+            f"k={cb_cfg.k}; use precision={precision.split('+')[0]!r}")
     out = []
     for (fi, _), vq in zip(_layer_out_dims(cfg), vq_states):
-        st = vq._replace(assignment=vq.assignment.astype(jnp.uint8))
-        out.append(quantize_layer_state(st, fi, cb_cfg))
+        a = vq.assignment
+        if isinstance(a, PackedAssignment):
+            a = a if pack else a.unpack()
+        else:
+            a = a.astype(jnp.uint8)
+            if pack:
+                a = PackedAssignment.pack(a)
+        st = vq._replace(assignment=a, qcw=None)
+        out.append(quantize_layer_state(st, fi, cb_cfg, dtype=cw_dtype))
     return out
 
 

@@ -35,6 +35,8 @@ import numpy as np
 
 from repro.core import codebook as cbm
 from repro.core.conv import refresh_assignment
+from repro.distributed.quantization import dtype_nbits
+from repro.kernels import ops as kops
 from repro.distributed.data_parallel import ShardedGraphState, \
     vq_train_epoch_dp, vq_train_epoch_sharded
 from repro.graph.batching import (build_epoch_plan, epoch_slices,
@@ -91,7 +93,8 @@ def _evaluate(params, g, cfg, x, ops):
 # ---------------------------------------------------------------------------
 
 def vq_batch_bytes(b: int, deg: int, f: int, L: int, k: int,
-                   f_prod: int = 4, f_grad: Optional[int] = None) -> int:
+                   f_prod: int = 4, f_grad: Optional[int] = None,
+                   precision: Optional[str] = None) -> int:
     """VQ-GNN per-batch device bytes: batch features/acts + packed neighbor
     lists + codebooks + reconstructed context messages.
 
@@ -102,12 +105,26 @@ def vq_batch_bytes(b: int, deg: int, f: int, L: int, k: int,
     ``f`` is not divisible by ``f_prod`` or the layout is capped by the
     gradient width (e.g. any transformer-backbone full-width codebook).
     ``f_grad`` defaults to ``f`` (the Z-level gradient codewords of the
-    fixed-convolution backbones)."""
+    fixed-convolution backbones).
+
+    ``precision`` (a :data:`repro.kernels.ops.PRECISIONS` tier; default
+    fp32 accounting) sizes the per-layer codeword tables the kernels
+    actually read under that tier -- e.g. int8/fp8 tables at 8 bits plus
+    their f32 per-channel scale rows -- via the shared
+    :func:`~repro.distributed.quantization.dtype_nbits`, so sub-byte
+    operand widths stay exact (bit-accumulated, rounded up once)."""
     f_grad = f if f_grad is None else f_grad
     n_branches, fb, gb = cbm.branch_layout(f, f_grad, f_prod)
     pack = b * deg * 4 * 6                     # ids/mask/pos x2 directions
     acts = L * b * f * 4
-    books = L * n_branches * k * (fb + gb) * 4
+    cw_dtype = None if precision is None \
+        else kops.precision_codeword_dtype(precision)
+    if cw_dtype is None:
+        books = L * n_branches * k * (fb + gb) * 4
+    else:
+        bits = L * n_branches * k * (fb + gb) * dtype_nbits(cw_dtype)
+        books = (bits + 7) // 8 \
+            + L * n_branches * (fb + gb) * 4   # f32 per-channel scales
     recon = b * deg * f * 4                    # reconstructed neighbors
     return pack + acts + books + recon
 
@@ -327,7 +344,8 @@ def train_vq(g: Graph, cfg: GNNConfig, *, epochs: int, batch_size: int,
             "vq_states": vq,
             "mem_bytes": vq_batch_bytes(
                 batch_size, deg, cfg.hidden, cfg.n_layers, cfg.codebook.k,
-                f_prod=cfg.layer_codebook_cfg().f_prod, f_grad=f_grad),
+                f_prod=cfg.layer_codebook_cfg().f_prod, f_grad=f_grad,
+                precision=kops.kernel_precision()),
             "messages": messages_per_batch_vq(g, batch_size)}
 
 
