@@ -35,6 +35,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import hostenv
+
 _ROW_CLAMP = 512      # measured problems never exceed this many batch rows
 _SRC_CLAMP = 8192     # ... nor this many gather-source rows
 _REPS = 2             # best-of reps after one warmup (jit compile) call
@@ -44,12 +46,15 @@ _cache: Optional[dict[str, Any]] = None
 
 
 def enabled() -> bool:
-    """Autotuning is opt-in: measurements only run under REPRO_AUTOTUNE=1."""
-    return os.environ.get("REPRO_AUTOTUNE", "0") == "1"
+    """Autotuning is opt-in: measurements only run under REPRO_AUTOTUNE=1.
+
+    Read through the hostenv snapshot -- the tuners are consulted by the
+    ops.py dispatchers inside jit traces (env-read-once contract)."""
+    return hostenv.env_knob("REPRO_AUTOTUNE", "0") == "1"
 
 
 def cache_path() -> str:
-    return os.environ.get(
+    return hostenv.env_knob(
         "REPRO_AUTOTUNE_CACHE",
         os.path.join(os.path.expanduser("~"), ".cache", "repro",
                      "autotune.json"))

@@ -34,12 +34,12 @@ Production notes (TPU):
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import hostenv
 from repro.kernels import autotune, ref
 from repro.kernels.vq_assign import vq_assign_pallas
 from repro.kernels.vq_update import vq_assign_update_pallas
@@ -52,7 +52,10 @@ from repro.distributed.quantization import PackedAssignment, QTensor
 
 
 def _use_pallas() -> bool:
-    if os.environ.get("REPRO_FORCE_PALLAS", "0") == "1":
+    # env knobs resolve through the hostenv snapshot: this runs inside jit
+    # traces, where a live os.environ read would desynchronize from jax's
+    # executable cache (the env-read-once contract, DESIGN.md section 16)
+    if hostenv.env_knob("REPRO_FORCE_PALLAS", "0") == "1":
         return True
     return jax.default_backend() == "tpu"
 
@@ -102,7 +105,7 @@ def kernel_precision() -> str:
     if _precision_override:
         return _precision_override[0]
     return _check_precision(
-        os.environ.get("REPRO_KERNEL_PRECISION", "fp32"),
+        hostenv.env_knob("REPRO_KERNEL_PRECISION", "fp32"),
         "REPRO_KERNEL_PRECISION")
 
 
@@ -178,7 +181,7 @@ def _vmem_budget_mb(overrides: dict, env_name: str) -> float:
     per consumer).
     """
     raw = overrides.get("vmem_budget_mb",
-                        os.environ.get(env_name, _DEFAULT_VMEM_BUDGET_MB))
+                        hostenv.env_knob(env_name, _DEFAULT_VMEM_BUDGET_MB))
     try:
         budget = float(raw)  # type: ignore[arg-type]
     except (TypeError, ValueError):
@@ -192,7 +195,7 @@ def _vmem_budget_mb(overrides: dict, env_name: str) -> float:
 def _budget_forced(overrides: dict, env_name: str) -> bool:
     """True when the budget was explicitly configured -- the autotuner then
     stands down (env vars stay authoritative, DESIGN.md section 13)."""
-    return "vmem_budget_mb" in overrides or env_name in os.environ
+    return "vmem_budget_mb" in overrides or hostenv.env_knob_set(env_name)
 
 
 def configure_spmm_dispatch(variant: Optional[str] = None,
@@ -223,7 +226,7 @@ def spmm_ell_variant(n_src: int, f: int, itemsize: int = 4) -> str:
     the default budget.
     """
     forced = _dispatch_overrides.get(
-        "variant", os.environ.get("REPRO_SPMM_VARIANT", "auto"))
+        "variant", hostenv.env_knob("REPRO_SPMM_VARIANT", "auto"))
     if forced not in ("auto", "resident", "hbm"):
         raise ValueError(
             f"REPRO_SPMM_VARIANT={forced!r}: want auto, resident or hbm")
@@ -325,7 +328,7 @@ def context_ell_variant(n_nodes: int, n_branches: int,
     keys the autotuner entry (defaults to an itemsize-derived dtype).
     """
     forced = _context_overrides.get(
-        "variant", os.environ.get("REPRO_CONTEXT_VARIANT", "auto"))
+        "variant", hostenv.env_knob("REPRO_CONTEXT_VARIANT", "auto"))
     if forced not in ("auto", "fused", "loop"):
         raise ValueError(
             f"REPRO_CONTEXT_VARIANT={forced!r}: want auto, fused or loop")

@@ -1,11 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
+if __name__ == "__main__":
+    # the CLI's 512 virtual devices; guarded so merely importing this
+    # module never mutates the process environment (import-time side
+    # effects are banned -- repro.analysis REPRO005)
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes, and extract the roofline terms from the compiled HLO.
 
-MUST set XLA_FLAGS above before ANY other import (jax locks the device
-count on first init).  Never import this module from tests/benches.
+As a CLI (``python -m repro.launch.dryrun``) the XLA_FLAGS mutation above
+runs before ANY other import (jax locks the device count on first init);
+programmatic users must set XLA_FLAGS themselves before importing jax.
+Never import this module from tests/benches.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \

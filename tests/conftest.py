@@ -1,4 +1,21 @@
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_env_knobs():
+    """Drop the hostenv knob snapshot between tests.
+
+    ``repro.hostenv`` freezes REPRO_* env knobs at their last host-side
+    value while a jax trace is active (the env-read-once contract); a
+    monkeypatched knob from one test must not leak into the next test's
+    traces, so every test starts from a clean snapshot (the first read
+    then sees the live -- possibly monkeypatched -- environment).
+    """
+    from repro import hostenv
+    hostenv.reset_env_snapshot()
+    yield
