@@ -1,0 +1,63 @@
+"""Static contract checking for the VQ-GNN serving stack (DESIGN.md sec. 16).
+
+Three passes, each emitting :class:`Finding` rows:
+
+  * ``jaxpr_checks``  (REPRO1xx) -- abstractly trace the registered hot
+    entry points on tiny specs and prove the dispatch-count, callback,
+    quantized-dtype-flow, donation, scan-carry and residual contracts
+    from the jaxprs themselves.
+  * ``pallas_vmem``   (REPRO2xx) -- walk every ``pallas_call`` equation's
+    grid + BlockSpecs, compute per-dispatch VMEM footprints and
+    grid/block divisibility, and cross-check the ``kernels/ops.py``
+    dispatch crossovers against the computed footprints.
+  * ``ast_checks``    (REPRO0xx) -- repo lint rules on the source tree
+    (env reads reachable from jit, banned one-hot/einsum shapes in hot
+    modules, Python loops in kernel bodies, unregistered pytree
+    containers, import-time side effects).
+
+CLI: ``python -m repro.analysis [--format text|github] [--baseline FILE]
+[--pass ast|vmem|jaxpr ...]`` -- exits non-zero on any unsuppressed
+finding.  This module stays import-light (no jax, no pass imports): the
+shared ``trace_count`` telemetry lives here and is imported by
+``models/gnn.py``, so pulling the passes in eagerly would be a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation: a rule id, a location, and a message."""
+    rule: str          # "REPRO001" ... "REPRO2xx"
+    path: str          # repo-relative source path, or "<entry:NAME>" for
+    #                    jaxpr-level findings with no single source line
+    line: int          # 1-based; 0 when not tied to a line
+    message: str
+
+    def key(self) -> str:
+        """Stable identity for baseline suppression (message-insensitive,
+        so rewording a diagnostic never invalidates a baseline)."""
+        return f"{self.rule}|{self.path}|{self.line}"
+
+    def format(self, fmt: str = "text") -> str:
+        if fmt == "github":
+            # GitHub Actions workflow-command annotation syntax
+            loc = f"file={self.path},line={max(self.line, 1)}"
+            return f"::error {loc},title={self.rule}::{self.message}"
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def load_baseline(path: str) -> set[str]:
+    """Suppression keys, one ``Finding.key()`` per line; '#' comments."""
+    keys: set[str] = set()
+    with open(path) as fh:
+        for raw in fh:
+            line = raw.split("#", 1)[0].strip()
+            if line:
+                keys.add(line)
+    return keys
+
+
+def suppress(findings: list[Finding], baseline: set[str]) -> list[Finding]:
+    return [f for f in findings if f.key() not in baseline]

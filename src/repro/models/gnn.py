@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import trace_count
 from repro.core import codebook as cbm
 from repro.core.codebook import CodebookConfig
 from repro.core.conv import LayerVQState, MinibatchPack, init_layer_vq_state, \
@@ -444,11 +445,13 @@ def vq_eval_batch(params, vq_states, pack: MinibatchPack, x_b, degrees,
 # device-resident mini-batched inference (DESIGN.md section 11)
 # ---------------------------------------------------------------------------
 
-# Incremented at TRACE time of the jitted inference entry points.  The
-# compile-count contract tests pin the executor's promise on it: one
-# inference pass costs n_layers layer traces (and a serve step one trace),
-# independent of the batch count S and of whether the batch size divides n.
-INFER_TRACE_COUNT = {"layer": 0, "serve": 0}
+# Bumped at TRACE time of the jitted inference entry points.  The
+# compile-count contract tests and the repro.analysis jaxpr pass pin the
+# executor's promise on it: one inference pass costs n_layers layer traces
+# (and a serve step one trace), independent of the batch count S and of
+# whether the batch size divides n.  Re-exported here for compatibility;
+# the counter itself lives in the shared telemetry module.
+INFER_TRACE_COUNT = trace_count.INFER_TRACE_COUNT
 
 
 def _vq_infer_layer_body(params_l, vq_state: LayerVQState, plan: EpochPlan,
@@ -462,7 +465,7 @@ def _vq_infer_layer_body(params_l, vq_state: LayerVQState, plan: EpochPlan,
     absorbs wrap-padded tail slots so a node duplicated by the padding
     keeps its real-slot output).
     """
-    INFER_TRACE_COUNT["layer"] += 1
+    INFER_TRACE_COUNT.bump("layer")
     bk = BACKBONES[cfg.backbone]
     cb_cfg = cfg.layer_codebook_cfg()
     fi, fo = _layer_out_dims(cfg)[layer]
@@ -549,7 +552,7 @@ def vq_serve_batch(params, vq_states, plan: EpochPlan, bids: jax.Array,
     identical batch partitions the two coincide exactly; the executor is
     the layer-locked offline sweep, the serve step the online per-request
     form)."""
-    INFER_TRACE_COUNT["serve"] += 1
+    INFER_TRACE_COUNT.bump("serve")
     pack = plan_batch(plan, bids.astype(jnp.int32))
     out, _ = vq_forward(params, x[bids], None, pack, vq_states, degrees,
                         cfg, inject=False)
@@ -579,7 +582,7 @@ def _vq_infer_layer_body_sharded(params_l, vq_state: LayerVQState,
     never read back.  Requires S padded to a multiple of ndev
     (all-masked batches) so the per-step collectives stay lockstep.
     """
-    INFER_TRACE_COUNT["layer"] += 1
+    INFER_TRACE_COUNT.bump("layer")
     bk = BACKBONES[cfg.backbone]
     cb_cfg = cfg.layer_codebook_cfg()
     fi, fo = _layer_out_dims(cfg)[layer]
@@ -640,7 +643,7 @@ def _vq_serve_body_sharded(params, vq_states, plan: EpochPlan,
     unsharded serve step, with the mesh buying graph-state capacity
     (the O(b*L) serve compute is replicated; serve batches are tiny
     next to the [n, D] state this path exists to split)."""
-    INFER_TRACE_COUNT["serve"] += 1
+    INFER_TRACE_COUNT.bump("serve")
     bids = bids.astype(jnp.int32)
     pack = plan_batch_sharded(plan, bids, axis_name)
     x_b = gather_from_shards(x, bids, axis_name, compress=compress)

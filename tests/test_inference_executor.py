@@ -16,7 +16,8 @@ from repro.core.codebook import CodebookConfig
 from repro.graph.batching import (build_epoch_plan, epoch_slices,
                                   full_operands, inference_slices)
 from repro.graph.datasets import synthetic_arxiv
-from repro.models.gnn import (GNNConfig, INFER_TRACE_COUNT,
+from repro.analysis.trace_count import INFER_TRACE_COUNT
+from repro.models.gnn import (GNNConfig,
                               _layer_out_dims, _vq_infer_layer_body,
                               hits_at_k, init_gnn, init_vq_states,
                               vq_infer_epoch, vq_serve_batch)
@@ -133,17 +134,17 @@ def test_compile_count_independent_of_batch_count(g):
     params = init_gnn(jax.random.PRNGKey(2), cfg)
     vq = init_vq_states(jax.random.PRNGKey(3), cfg, g.n)
 
-    before = INFER_TRACE_COUNT["layer"]
+    before = INFER_TRACE_COUNT.snapshot()
     vq_inference(params, vq, g, cfg, 128)      # S = 3 (padded tail)
-    assert INFER_TRACE_COUNT["layer"] - before == cfg.n_layers
+    assert INFER_TRACE_COUNT.delta(before)["layer"] == cfg.n_layers
 
-    before = INFER_TRACE_COUNT["layer"]
+    before = INFER_TRACE_COUNT.snapshot()
     vq_inference(params, vq, g, cfg, 128)      # warm: zero new traces
-    assert INFER_TRACE_COUNT["layer"] - before == 0
+    assert INFER_TRACE_COUNT.delta(before)["layer"] == 0
 
-    before = INFER_TRACE_COUNT["layer"]
+    before = INFER_TRACE_COUNT.snapshot()
     vq_inference(params, vq, g, cfg, 97)       # S = 4, still ragged n
-    assert INFER_TRACE_COUNT["layer"] - before == cfg.n_layers
+    assert INFER_TRACE_COUNT.delta(before)["layer"] == cfg.n_layers
 
 
 def test_layer_body_jaxpr_one_scan_size_independent_of_S(g, setup):
