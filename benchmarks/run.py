@@ -157,6 +157,20 @@ def update_baselines(suites: list[str]) -> None:
             "--update-baselines refuses to run on a dirty git tree "
             "(baselines must snapshot a committed code state); commit or "
             f"stash first:\n{dirty}")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "src"), here, env.get("PYTHONPATH", "")])
+    # same reasoning as the dirty-tree refusal: a baseline snapshotted
+    # from a tree that fails its own static contracts (repro.analysis:
+    # dispatch counts, VMEM budgets, lint rules) pins numbers the CI
+    # gate would reject anyway
+    checker = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", here],
+        env=env, cwd=here, timeout=1800)
+    if checker.returncode != 0:
+        raise SystemExit(
+            "--update-baselines refuses to run: repro.analysis reports "
+            "findings (fix the tree before snapshotting baselines)")
     if not suites:
         suites = sorted(
             f[len("BENCH_"):-len(".json")]
@@ -165,9 +179,6 @@ def update_baselines(suites: list[str]) -> None:
     unknown = [s for s in suites if s not in SUITES]
     if unknown:
         raise SystemExit(f"unknown suite(s) {unknown}; want {SUITES}")
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(here, "src"), here, env.get("PYTHONPATH", "")])
     for name in suites:
         path = os.path.join(base_dir, f"BENCH_{name}.json")
         print(f"regenerating {path} ...")

@@ -1,0 +1,64 @@
+"""CLI: ``python -m repro.analysis [--format text|github] [--baseline F]``.
+
+Runs the three passes (AST lint first -- it needs no jax -- then the
+jaxpr contract pass, then the Pallas VMEM pass, which reuses the jaxpr
+pass's cached traces), prints every unsuppressed finding in the chosen
+format, and exits 1 if any remain.  ``--baseline`` names a suppression
+file of ``Finding.key()`` lines; the repo policy is an EMPTY baseline
+(fix the tree, not the checker), but the flag exists so a downstream
+fork can adopt the gate incrementally.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import Finding, load_baseline, suppress
+
+_PASSES = ("ast", "jaxpr", "vmem")
+
+
+def _run_pass(name: str, root: str) -> list[Finding]:
+    if name == "ast":
+        from repro.analysis import ast_checks
+        return ast_checks.run(root)
+    if name == "jaxpr":
+        from repro.analysis import jaxpr_checks
+        return jaxpr_checks.run(root)
+    from repro.analysis import pallas_vmem
+    return pallas_vmem.run(root)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static contract checks: jaxpr contracts, Pallas "
+                    "VMEM footprints, repo lint rules")
+    ap.add_argument("--format", choices=("text", "github"),
+                    default="text")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="suppression file (one finding key per line)")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=_PASSES, metavar="|".join(_PASSES),
+                    help="run only the named pass(es); default: all")
+    ap.add_argument("--root", default=".",
+                    help="repository root (default: cwd)")
+    args = ap.parse_args(argv)
+
+    findings: list[Finding] = []
+    for name in args.passes or _PASSES:
+        findings.extend(_run_pass(name, args.root))
+    if args.baseline:
+        findings = suppress(findings, load_baseline(args.baseline))
+
+    for f in findings:
+        print(f.format(args.format))
+    if findings:
+        print(f"{len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("repro.analysis: clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,218 @@
+"""Pass 2: Pallas VMEM static analysis (REPRO20x).
+
+Walks every ``pallas_call`` equation of every registered entry's traced
+jaxpr and computes its per-dispatch VMEM working set from the grid
+mapping itself -- the sum of BlockSpec block bytes over the operands the
+kernel actually holds in VMEM (operands in the ``any`` memory space are
+HBM-resident and DMA'd manually; they charge their scratch buffers, not
+their array bytes).
+
+  REPRO201  a dispatch's computed VMEM working set exceeds the per-core
+            envelope (2x the dispatch-heuristic budget: the heuristic
+            reserves half of the ~16 MiB core VMEM, so any BLOCK footprint
+            beyond the full envelope cannot be double-buffered at all).
+  REPRO202  a BlockSpec that does not tile its operand evenly (array dim
+            not divisible by block dim): the kernels pad their operands
+            before dispatch, so a ragged block in a traced jaxpr means a
+            padding path was dropped.
+  REPRO203  dispatch-crossover cross-check: probe ``kernels/ops.py`` just
+            below and just above its size heuristics and verify the
+            heuristic agrees with the computed footprints -- below the
+            SpMM crossover the resident kernel's working set must fit the
+            envelope, above it the whole-matrix-in-VMEM kernel must NOT
+            be chosen (ditto fused-vs-loop for the context kernel, where
+            "one fused dispatch" is the below-crossover signature).
+
+The crossover probes re-derive their shapes from the LIVE budgets
+(``_vmem_budget_mb``), so a deployment that overrides
+``REPRO_*_VMEM_BUDGET_MB`` is checked against its own configuration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import Finding
+from repro.analysis import registry
+from repro.analysis.jaxpr_checks import pallas_calls
+from repro.distributed.quantization import dtype_nbits
+
+
+def _block_bytes(bm) -> int:
+    total = 1
+    for d in bm.block_shape:
+        total *= int(d) if isinstance(d, int) else 1
+    try:
+        nbits = dtype_nbits(bm.array_shape_dtype.dtype)
+    except (KeyError, TypeError):
+        return 0
+    return (total * nbits + 7) // 8
+
+
+def _is_vmem(bm) -> bool:
+    """Default-space blocks live in VMEM; 'any' means HBM-resident."""
+    space = getattr(bm.block_aval, "memory_space", None)
+    return space is None or "any" not in str(space).lower()
+
+
+def _scratch_bytes(eqn) -> int:
+    gm = eqn.params["grid_mapping"]
+    ns = gm.num_scratch_operands
+    if not ns:
+        return 0
+    body = eqn.params["jaxpr"]
+    total = 0
+    for var in body.invars[len(body.invars) - ns:]:
+        aval = getattr(var.aval, "inner_aval", var.aval)
+        shape = getattr(aval, "shape", ())
+        try:
+            nbits = dtype_nbits(getattr(aval, "dtype", None))
+        except (KeyError, TypeError):
+            continue  # semaphores and other unsized scratch
+        size = 1
+        for d in shape:
+            size *= int(d)
+        total += (size * nbits + 7) // 8
+    return total
+
+
+def dispatch_footprint(eqn) -> int:
+    """Computed VMEM bytes of one pallas_call dispatch."""
+    gm = eqn.params["grid_mapping"]
+    blocks = sum(_block_bytes(bm) for bm in gm.block_mappings
+                 if _is_vmem(bm))
+    return blocks + _scratch_bytes(eqn)
+
+
+def _kernel_name(eqn) -> str:
+    return eqn.params["name_and_src_info"].name
+
+
+def _envelope_bytes(kops) -> int:
+    budget = max(
+        kops._vmem_budget_mb(kops._dispatch_overrides,
+                             "REPRO_SPMM_VMEM_BUDGET_MB"),
+        kops._vmem_budget_mb(kops._context_overrides,
+                             "REPRO_CONTEXT_VMEM_BUDGET_MB"))
+    return int(budget * 2 * 2 ** 20)
+
+
+def check_dispatches(closed_jaxpr, where: str,
+                     envelope: int) -> list[Finding]:
+    """REPRO201/202 over every pallas_call of one traced jaxpr."""
+    findings = []
+    for eqn in pallas_calls(closed_jaxpr):
+        name = _kernel_name(eqn)
+        fp = dispatch_footprint(eqn)
+        if fp > envelope:
+            findings.append(Finding(
+                "REPRO201", where, 0,
+                f"pallas dispatch '{name}' holds {fp} bytes in VMEM, "
+                f"over the {envelope}-byte per-dispatch envelope"))
+        for bm in eqn.params["grid_mapping"].block_mappings:
+            if not _is_vmem(bm):
+                continue
+            arr = bm.array_shape_dtype.shape
+            blk = bm.block_shape
+            for a, b in zip(arr, blk):
+                if isinstance(b, int) and b > 0 and int(a) % b != 0:
+                    findings.append(Finding(
+                        "REPRO202", where, 0,
+                        f"'{name}' BlockSpec {tuple(blk)} does not tile "
+                        f"operand {tuple(arr)} evenly (pad before "
+                        f"dispatch)"))
+                    break
+    return findings
+
+
+def _crossover_findings() -> list[Finding]:
+    """REPRO203: ops.py heuristics vs computed footprints."""
+    from repro.kernels import ops as kops
+    findings: list[Finding] = []
+    sds = jax.ShapeDtypeStruct
+    envelope = _envelope_bytes(kops)
+    b, deg = 32, 8
+
+    def spmm_probe(n_src, f):
+        args = (sds((b, deg), jnp.int32), sds((b, deg), jnp.float32),
+                sds((n_src, f), jnp.float32))
+        with registry.forced_pallas():
+            # fresh lambda per probe: make_jaxpr caches traces on the
+            # (function object, avals) pair, and the dispatch decision
+            # must be re-evaluated under the CURRENT overrides
+            return jax.make_jaxpr(lambda *a: kops.spmm_ell(*a))(*args)
+
+    budget = int(kops._vmem_budget_mb(
+        kops._dispatch_overrides, "REPRO_SPMM_VMEM_BUDGET_MB") * 2 ** 20)
+    f = 16
+    n_below = int(budget * 0.9) // (f * 4)
+    n_above = int(budget * 1.2) // (f * 4)
+    below = pallas_calls(spmm_probe(n_below, f))
+    if len(below) != 1 or dispatch_footprint(below[0]) > envelope:
+        findings.append(Finding(
+            "REPRO203", "<crossover:spmm_ell>", 0,
+            f"below the SpMM crossover ([{n_below}, {f}] f32) the "
+            f"resident dispatch's computed footprint "
+            f"{[dispatch_footprint(e) for e in below]} exceeds the "
+            f"{envelope}-byte envelope (heuristic admits over-budget "
+            f"dispatches)"))
+    above = pallas_calls(spmm_probe(n_above, f))
+    resident_x = [
+        e for e in above
+        if any(_is_vmem(bm) and tuple(bm.block_shape) == (  # whole x in VMEM
+            bm.array_shape_dtype.shape) and
+            bm.array_shape_dtype.shape[0] >= n_above
+            for bm in e.params["grid_mapping"].block_mappings)]
+    if resident_x:
+        findings.append(Finding(
+            "REPRO203", "<crossover:spmm_ell>", 0,
+            f"above the SpMM crossover ([{n_above}, {f}] f32) the "
+            f"dispatcher still VMEM-blocks the whole source matrix "
+            f"({[_kernel_name(e) for e in resident_x]})"))
+
+    def ctx_probe(n, nb):
+        k, fb = 8, 4
+        args = (sds((b, deg), jnp.int32), sds((b, deg), jnp.float32),
+                sds((nb, n), jnp.int32), sds((nb, k, fb), jnp.float32))
+        with registry.forced_pallas():
+            return jax.make_jaxpr(lambda *a: kops.context_ell(*a))(*args)
+
+    cbudget = int(kops._vmem_budget_mb(
+        kops._context_overrides,
+        "REPRO_CONTEXT_VMEM_BUDGET_MB") * 2 ** 20)
+    nb = 4
+    n_below = int(cbudget * 0.9) // (nb * 4)
+    n_above = int(cbudget * 1.2) // (nb * 4)
+    below = pallas_calls(ctx_probe(n_below, nb))
+    if (len(below) != 1 or "context" not in _kernel_name(below[0])
+            or dispatch_footprint(below[0]) > envelope):
+        findings.append(Finding(
+            "REPRO203", "<crossover:context_ell>", 0,
+            f"below the context crossover ([{nb}, {n_below}] int32) "
+            f"expected ONE fused dispatch within the envelope, traced "
+            f"{[(_kernel_name(e), dispatch_footprint(e)) for e in below]}"
+        ))
+    above = pallas_calls(ctx_probe(n_above, nb))
+    if any("context" in _kernel_name(e) for e in above):
+        findings.append(Finding(
+            "REPRO203", "<crossover:context_ell>", 0,
+            f"above the context crossover ([{nb}, {n_above}] int32) the "
+            f"fused kernel (whole assignment table VMEM-resident) is "
+            f"still dispatched"))
+    return findings
+
+
+def run(root: str | None = None) -> list[Finding]:
+    del root
+    from repro.kernels import ops as kops
+    envelope = _envelope_bytes(kops)
+    findings: list[Finding] = []
+    for entry in registry.entries():
+        try:
+            cj = entry.jaxpr()
+        except Exception:
+            continue  # the jaxpr pass reports trace failures
+        findings.extend(
+            check_dispatches(cj, f"<entry:{entry.name}>", envelope))
+    findings.extend(_crossover_findings())
+    return findings
